@@ -1,0 +1,22 @@
+"""Paper Fig. 5: τ vs SSM planning time (the online path must be fast —
+the paper reports <2 ms at m=64)."""
+import numpy as np
+
+from .common import M_FULL, N_HI, N_LO, emit, run_policy_over_trace, stream
+
+TAUS = (0.4, 0.6, 0.8, 1.2, 1.6)
+
+
+def main():
+    w, s, trace = stream(M_FULL, N_LO, N_HI)
+    rows = []
+    for tau in TAUS:
+        res = run_policy_over_trace("ssm", w, s, trace, tau)
+        rows.append((tau, round(res["avg_plan_ms"], 3), res["migrations"]))
+    out = emit(rows, ("tau", "ssm_plan_ms", "migrations"))
+    assert all(r["ssm_plan_ms"] < 1000.0 for r in out)  # python-loop budget
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Paper Fig. 8: sliding-window size ω vs result response time.
+
+Larger windows ⇒ more operator state ⇒ heavier migrations ⇒ higher response
+times around migrations; MTM-aware stays below single-step.  Response time
+comes from the live-migration fluid simulation (runtime/serving.py)."""
+import numpy as np
+
+from repro.core import ElasticPlanner
+from repro.runtime import ElasticServingSim, SimConfig
+from .common import M_MTM, N_HI_MTM, N_LO_MTM, build_pmc, emit, stream
+
+WINDOW_SCALE = (0.5, 1.0, 2.0, 4.0)     # ω multiplier on state sizes
+
+
+def main():
+    w, s0, trace = stream(M_MTM, N_LO_MTM, N_HI_MTM, zipf_a=0.5,
+                          burst_prob=0.0)
+    rows = []
+    for scale in WINDOW_SCALE:
+        s = s0 * scale * 2000.0         # sizeable state, like FP windows
+        res = {}
+        for policy in ("ssm", "mtm"):
+            planner = ElasticPlanner(policy=policy, gamma=0.8, pmc_grid=2)
+            if policy == "mtm":
+                planner.fixed_pmc = build_pmc(w, s, trace, 0.4)[0]
+            sim = ElasticServingSim(M_MTM,
+                                    SimConfig(bw_bytes_per_s=20e6),
+                                    planner, mode="live", tau=0.4)
+            mets = sim.run(w, s, trace)
+            mig = [x.mean_response_s for x in mets
+                   if x.migration_cost_bytes > 0]
+            res[policy] = float(np.mean(mig)) if mig else 0.0
+        rows.append((scale, round(res["ssm"] * 1e3, 2),
+                     round(res["mtm"] * 1e3, 2)))
+    out = emit(rows, ("window_scale", "ssm_response_ms", "mtm_response_ms"))
+    # response grows with window (state) size
+    assert out[-1]["ssm_response_ms"] >= out[0]["ssm_response_ms"]
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Figs. 9+10: discount factor γ vs MTM migration cost (Fig. 9, ↓
+with γ) and vs PMC pre-computation time (Fig. 10, ↑ with γ — more value-
+iteration sweeps to converge)."""
+import numpy as np
+
+from .common import (
+    M_SMALL, N_HI_SMALL, N_LO_SMALL, build_pmc, emit,
+    run_policy_over_trace, stream,
+)
+
+GAMMAS = (0.0, 0.4, 0.8, 0.95)
+
+
+def main():
+    w, s, trace = stream(M_SMALL, N_LO_SMALL, N_HI_SMALL, zipf_a=0.5,
+                         burst_mult=3.0)
+    rows = []
+    for g in GAMMAS:
+        pmc_res, t_pre = build_pmc(w, s, trace, tau=0.8, gamma=g,
+                                   grid=1, limit_per_k=None)
+        res = run_policy_over_trace("mtm", w, s, trace, tau=0.8,
+                                    pmc_result=pmc_res)
+        rows.append((g, round(res["avg_cost_pct"], 2), round(t_pre, 2),
+                     pmc_res.iterations))
+    out = emit(rows, ("gamma", "mtm_cost_pct", "pmc_s", "vi_iterations"))
+    # gamma=0 reduces to single-step; larger gamma must not cost more
+    assert out[0]["mtm_cost_pct"] >= out[-1]["mtm_cost_pct"] - 1e-9
+    assert out[-1]["vi_iterations"] >= out[0]["vi_iterations"]
+    return out
+
+
+if __name__ == "__main__":
+    main()

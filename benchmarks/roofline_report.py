@@ -1,0 +1,64 @@
+"""Aggregate experiments/dryrun/*.json into the roofline table
+(EXPERIMENTS.md §Roofline)."""
+import json
+from pathlib import Path
+
+COLS = ("arch", "shape", "mesh", "status", "compute_s", "memory_s",
+        "collective_s", "bottleneck", "useful_compute_ratio",
+        "roofline_fraction", "temp_size_in_bytes", "compile_s")
+
+
+def load(d="experiments/dryrun", tag=None):
+    rows = []
+    for p in sorted(Path(d).glob("*.json")):
+        rec = json.loads(p.read_text())
+        if tag is None and rec.get("schedule", "masked") != "masked":
+            continue
+        rec.setdefault("variant", "base")
+        rows.append(rec)
+    return rows
+
+
+def fmt(x):
+    if isinstance(x, float):
+        return f"{x:.4g}"
+    return str(x)
+
+
+def main(d="experiments/dryrun", md_out="experiments/roofline_table.md"):
+    rows = load(d)
+    print(",".join(COLS))
+    ok = skipped = failed = 0
+    for r in rows:
+        print(",".join(fmt(r.get(c, "")) for c in COLS))
+        st = r.get("status")
+        ok += st == "ok"
+        skipped += st == "skipped"
+        failed += st == "failed"
+    print(f"# ok={ok} skipped={skipped} failed={failed}")
+    # markdown table (EXPERIMENTS.md §Roofline companion)
+    md = ["| arch | shape | mesh | variant | compute_s | memory_s | "
+          "collective_s | bottleneck | useful | roof_frac |",
+          "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") != "ok":
+            continue
+        md.append("| {arch} | {shape} | {mesh} | {variant} | {c:.4g} | "
+                  "{m:.4g} | {k:.4g} | {b} | {u:.3f} | {f:.4f} |".format(
+                      arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                      variant=r.get("variant", "base"),
+                      c=r["compute_s"], m=r["memory_s"],
+                      k=r["collective_s"], b=r["bottleneck"],
+                      u=r["useful_compute_ratio"],
+                      f=r["roofline_fraction"]))
+    from pathlib import Path
+    if md_out:
+        Path(md_out).parent.mkdir(parents=True, exist_ok=True)
+        Path(md_out).write_text("\n".join(md) + "\n")
+        print(f"# wrote {md_out} ({len(md)-2} rows)")
+    assert failed == 0, "dry-run failures present"
+    return rows
+
+
+if __name__ == "__main__":
+    main()

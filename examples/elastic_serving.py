@@ -1,0 +1,94 @@
+"""END-TO-END DRIVER: serve a small LM with batched requests while the
+serving fleet scales elastically and survives a node failure.
+
+    PYTHONPATH=src python examples/elastic_serving.py
+
+A qwen2.5-3b-family (reduced) model serves 24 concurrent requests.
+Requests hash into 24 KV buckets; each node owns a contiguous bucket
+interval (the paper's routing design).  Mid-decode we
+  (a) scale 2 → 4 nodes (SSM plans minimal KV movement, live executor
+      phases it),
+  (b) kill node 0 (failure recovery: survivors keep their KV in place,
+      the lost buckets' cost is charged to checkpoint restore),
+and decoding continues throughout — generated tokens are bit-identical to
+an uninterrupted run (state migration is transparent to the model).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core import ElasticPlanner, TauSchedule
+from repro.models import decode_step, init_cache, init_params, prefill
+from repro.runtime import (
+    BucketedState, ElasticController, MigrationExecutor, SimBackend, route,
+)
+
+
+def run(events: bool):
+    cfg = get_smoke("qwen2.5-3b")
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    B, P, G, m = 24, 16, 24, 24
+    prompts = jax.random.randint(key, (B, P), 0, cfg.vocab_size, jnp.int32)
+
+    cache = init_cache(cfg, B, P + G + 1)
+    logits, cache = prefill(params, cfg, {"tokens": prompts}, cache)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+    req_bucket = route(np.arange(B), m)
+    per_req_kv = sum(int(np.prod(v.shape[1:])) * v.dtype.itemsize
+                     for v in jax.tree_util.tree_leaves(cache))
+    kv_bytes = np.array([per_req_kv * (req_bucket == j).sum()
+                         for j in range(m)], float)
+    op_state = BucketedState(
+        [{"kv": np.zeros(max(int(kv_bytes[j] // 8), 1))} for j in range(m)])
+    ctl = ElasticController(
+        m, 2,
+        planner=ElasticPlanner(policy="ssm",
+                               tau=TauSchedule(base=1.2, grow=0.2)),
+        executor=MigrationExecutor(backend=SimBackend(bw_bytes_per_s=2e9),
+                                   mode="live"))
+    w = np.bincount(req_bucket, minlength=m).astype(float) + 1e-9
+
+    step_fn = jax.jit(lambda p, c, t, pos: decode_step(p, cfg, t, pos, c))
+    toks = [tok]
+    lat = []
+    for g in range(G):
+        if events and g == 6:
+            plan, rep = ctl.scale(4, w, op_state)
+            print(f"  step {g}: scale 2→4 — moved "
+                  f"{rep.bytes_moved/1e3:.0f} KB of KV in {rep.phases} "
+                  f"phases, {rep.duration_s*1e3:.2f} ms (simulated ICI)")
+        if events and g == 14:
+            plan, rep = ctl.recover({0}, w, op_state)
+            ck = ctl.events[-1].details["checkpoint_bytes"]
+            print(f"  step {g}: node 0 FAILED — survivors kept "
+                  f"{(1 - rep.bytes_moved/max(kv_bytes.sum(),1)) * 100:.0f}% "
+                  f"of KV in place; {ck/1e3:.0f} KB restored from ckpt; "
+                  f"now {ctl.n_nodes} nodes")
+        t0 = time.time()
+        pos = jnp.full((B,), P + g, jnp.int32)
+        logits, cache = step_fn(params, cache, tok, pos)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        toks.append(tok)
+        lat.append(time.time() - t0)
+    return jnp.concatenate(toks, axis=1), lat, ctl
+
+
+def main():
+    print("reference run (no elastic events)...")
+    ref, _, _ = run(events=False)
+    print("elastic run (scale-up @6, node failure @14)...")
+    got, lat, ctl = run(events=True)
+    assert (np.asarray(ref) == np.asarray(got)).all(), \
+        "generation must be identical across elastic events"
+    print(f"decode p50 {np.median(lat)*1e3:.0f} ms; "
+          f"events: {[(e.kind, e.n_before, e.n_after) for e in ctl.events]}")
+    print("OK — tokens bit-identical with and without elastic events")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Elastic training with checkpoint-restart and optimizer-state migration.
+
+    PYTHONPATH=src python examples/elastic_training.py
+
+Trains a reduced qwen3-family model (~1M params smoke config; pass --big
+for a ~100M-param olmo-1b config if you have the cycles) with:
+
+* deterministic restart-safe data (same stream after resume),
+* a mid-run SIMULATED preemption: checkpoint, drop the process state,
+  restore — loss curve continues exactly,
+* bucketed optimizer-state migration: the ZeRO shards are m buckets; when
+  the data-parallel group "scales" 4 → 6, SSM plans the minimal shard
+  movement (vs ad-hoc resharding that reshuffles nearly everything).
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core import Assignment, ElasticPlanner, TauSchedule, adhoc, ssm
+from repro.data import SyntheticLM
+from repro.launch.train import load_train_ckpt, save_train_ckpt
+from repro.models import init_params, loss_fn
+from repro.optim import OptConfig, adamw_update, init_opt_state
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--big", action="store_true")
+    ap.add_argument("--ckpt", default="/tmp/repro_elastic_train")
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke("olmo-1b" if args.big else "qwen3-8b")
+    opt_cfg = OptConfig(lr=1e-3, warmup_steps=10, total_steps=args.steps)
+    ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    opt_state = init_opt_state(params)
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch))(params)
+        p2, o2, met = adamw_update(grads, opt_state, params, opt_cfg)
+        met["loss"] = loss
+        return p2, o2, met
+
+    half = args.steps // 2
+    losses = []
+    for step in range(half):
+        params, opt_state, met = step_fn(params, opt_state,
+                                         ds.batch_at(step))
+        losses.append(float(met["loss"]))
+    print(f"step {half-1}: loss {losses[-1]:.4f} — checkpoint + preempt")
+    from pathlib import Path
+    save_train_ckpt(Path(args.ckpt), half, params, opt_state)
+
+    # --- simulated preemption: fresh state, restore ------------------------
+    params2 = init_params(cfg, jax.random.PRNGKey(999))     # junk
+    opt2 = init_opt_state(params2)
+    start, params2, opt2 = load_train_ckpt(
+        Path(args.ckpt), {"params": params2, "opt": opt2})
+    params2 = jax.tree_util.tree_map(jnp.asarray, params2)
+    opt2 = jax.tree_util.tree_map(jnp.asarray, opt2)
+    print(f"restored at step {start}; resuming")
+    for step in range(start, args.steps):
+        params2, opt2, met = step_fn(params2, opt2, ds.batch_at(step))
+        losses.append(float(met["loss"]))
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f}) — "
+          f"{'DECREASED' if losses[-1] < losses[0] else 'FLAT'}")
+    assert losses[-1] < losses[0]
+
+    # --- optimizer-shard migration on elastic resize ------------------------
+    # ZeRO-1 shards as m=32 buckets over 4 DP nodes; scale to 6.
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params2))
+    m = 32
+    shard_bytes = np.full(m, n_params * 12.0 / m)   # f32 master+m+v
+    w = np.ones(m)
+    old = Assignment.from_boundaries(m, [0, 8, 16, 24, 32])
+    opt_plan = ssm(old, 6, w, shard_bytes, 0.2)
+    naive = adhoc(old, 6, w, shard_bytes, 0.2)
+    print(f"DP resize 4→6: SSM moves {opt_plan.cost/1e6:.1f} MB of "
+          f"optimizer state; ad-hoc resharding moves {naive.cost/1e6:.1f} "
+          f"MB ({naive.cost/max(opt_plan.cost,1e-9):.1f}×)")
+    assert opt_plan.cost <= naive.cost
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

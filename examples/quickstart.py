@@ -1,0 +1,59 @@
+"""Quickstart: the paper's running example (word count) with optimal
+operator-state migration.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+A word stream flows into a stateful counting operator split into m=32 hash
+buckets across 2 nodes.  We burst-load it, scale to 5 nodes, compare SSM's
+migration bytes against the ad-hoc (Storm-default) strategy, shrink back on
+the quiet period, and verify not a single count was lost.
+"""
+import numpy as np
+
+from repro.core import ElasticPlanner, TauSchedule, adhoc
+from repro.runtime import ElasticWordCount, MigrationExecutor, SimBackend
+
+
+def main():
+    rng = np.random.default_rng(0)
+    app = ElasticWordCount(
+        m=32, n_nodes=2,
+        planner=ElasticPlanner(policy="ssm",
+                               tau=TauSchedule(base=1.2, grow=0.2)),
+        executor=MigrationExecutor(backend=SimBackend(bw_bytes_per_s=1e9),
+                                   mode="live"))
+
+    # 1) steady stream
+    words = rng.zipf(1.3, 20_000) % 5_000
+    app.ingest(words)
+    total_state = app.state.bucket_bytes().sum()
+    print(f"ingested {len(words)} words; operator state "
+          f"{total_state/1e3:.1f} KB across {app.m} buckets on 2 nodes")
+
+    # 2) burst => scale 2 -> 5
+    burst = np.concatenate([words, rng.integers(0, 50, 30_000)])
+    app.ingest(burst)
+    before = app.totals()
+    s = app.state.bucket_bytes()
+    w = app.work + 1e-9
+    naive = adhoc(app.assign, 5, w, s, 0.2)
+    plan, rep = app.scale(5)
+    print(f"scale 2→5: SSM moved {rep.bytes_moved/1e3:.1f} KB "
+          f"in {rep.phases} phases ({rep.duration_s*1e3:.2f} ms); "
+          f"ad-hoc would move {naive.cost/1e3:.1f} KB "
+          f"({naive.cost/max(rep.bytes_moved,1e-9):.1f}× more)")
+    assert app.totals() == before, "counts must survive the migration"
+
+    # 3) quiet period => scale back 5 -> 3
+    plan2, rep2 = app.scale(3)
+    print(f"scale 5→3: moved {rep2.bytes_moved/1e3:.1f} KB "
+          f"in {rep2.phases} phases")
+    assert app.totals() == before
+
+    top = sorted(before.items(), key=lambda kv: -kv[1])[:5]
+    print("top-5 words:", top)
+    print("OK — zero counts lost across two elastic events")
+
+
+if __name__ == "__main__":
+    main()

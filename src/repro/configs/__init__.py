@@ -1,0 +1,136 @@
+"""Architecture registry: the ten assigned architectures as selectable
+configs (``--arch <id>``), each with a FULL config (dry-run only) and a
+SMOKE reduction of the same family (CPU tests).
+
+``input_specs(cfg, shape)`` builds ShapeDtypeStruct stand-ins for every model
+input of an (arch × shape) cell — weak-type-correct, shardable, no device
+allocation.  Modality frontends are stubs: audio supplies precomputed frame
+embeddings, vlm supplies precomputed patch embeddings (per the assignment).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import (
+    ModelConfig, ShapeConfig, SHAPES, shape_applicable,
+)
+
+from . import (
+    falcon_mamba_7b,
+    internvl2_2b,
+    mixtral_8x7b,
+    olmo_1b,
+    phi35_moe,
+    qwen25_32b,
+    qwen25_3b,
+    qwen3_8b,
+    recurrentgemma_9b,
+    whisper_large_v3,
+)
+
+_MODULES = {
+    "recurrentgemma-9b": recurrentgemma_9b,
+    "phi3.5-moe-42b-a6.6b": phi35_moe,
+    "mixtral-8x7b": mixtral_8x7b,
+    "qwen2.5-32b": qwen25_32b,
+    "qwen3-8b": qwen3_8b,
+    "olmo-1b": olmo_1b,
+    "qwen2.5-3b": qwen25_3b,
+    "whisper-large-v3": whisper_large_v3,
+    "falcon-mamba-7b": falcon_mamba_7b,
+    "internvl2-2b": internvl2_2b,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+# Beyond-baseline perf variants (EXPERIMENTS.md §Perf).  Semantics-preserving:
+# head padding zero-inits the extra slots; bf16_reduce changes only the
+# all-reduced activation dtype (f32 MXU accumulation kept).
+OPT_OVERRIDES = {
+    "qwen2.5-32b": dict(head_pad_multiple=16),   # 40→48 heads: TP instead of
+                                                 # 16× replicated attention
+    "whisper-large-v3": dict(head_pad_multiple=16),  # 20→32 q+kv heads (MHA)
+    "mixtral-8x7b": dict(bf16_reduce=True, fused_gu=True,
+                     remat_save_reduced=True),
+    "phi3.5-moe-42b-a6.6b": dict(bf16_reduce=True, fused_gu=True),
+    "qwen3-8b": dict(bf16_reduce=True, fused_gu=True),
+    "internvl2-2b": dict(bf16_reduce=True),
+    "recurrentgemma-9b": dict(bf16_reduce=True),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list(_MODULES)}")
+    return _MODULES[arch].FULL
+
+
+def get_optimized(arch: str) -> ModelConfig:
+    return get_config(arch).replace(**OPT_OVERRIDES.get(arch, {}))
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _MODULES[arch].SMOKE
+
+
+def decode_cache_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """KV-cache length for decode cells (window-bounded for SWA/local)."""
+    if cfg.window:
+        return min(shape.seq_len, cfg.window)
+    return shape.seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                batch_override: int = None,
+                aligned_decode: bool = False
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct inputs for one (arch × shape) cell.
+
+    train/prefill: {"tokens" [B,S] (+ frames/patches)}.
+    decode: {"tokens" [B,1], "pos" [B]} — the cache is built separately via
+    ``cache_specs`` (it is carried state, not a stream input).
+    """
+    B = batch_override or shape.global_batch
+    i32 = jnp.int32
+    if shape.kind == "decode":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "pos": jax.ShapeDtypeStruct(() if aligned_decode else (B,), i32),
+        }
+        return specs
+    S = shape.seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), dt)
+    if cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_tokens, cfg.d_model), dt)
+    return specs
+
+
+def smoke_batch(cfg: ModelConfig, batch: int = 2, seq: int = 32,
+                seed: int = 0) -> Dict[str, jax.Array]:
+    """Concrete random inputs for the SMOKE config (CPU tests)."""
+    key = jax.random.PRNGKey(seed)
+    out = {"tokens": jax.random.randint(key, (batch, seq), 0,
+                                        cfg.vocab_size, jnp.int32)}
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "audio":
+        out["frames"] = jax.random.normal(
+            key, (batch, cfg.encoder_seq, cfg.d_model), dt)
+    if cfg.family == "vlm":
+        out["patches"] = jax.random.normal(
+            key, (batch, cfg.vision_tokens, cfg.d_model), dt)
+    return out
+
+
+__all__ = [
+    "ARCH_IDS", "ModelConfig", "ShapeConfig", "SHAPES",
+    "decode_cache_len", "get_config", "get_smoke", "input_specs",
+    "shape_applicable", "smoke_batch",
+]

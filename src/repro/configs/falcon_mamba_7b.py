@@ -1,0 +1,37 @@
+"""falcon-mamba-7b [ssm] — attention-free Mamba-1 architecture.
+
+64L d_model=4096 (attn-free) vocab=65024, ssm_state=16, expand=2.
+[arXiv:2410.05355; unverified]
+Decode state is O(1) in sequence length ⇒ long_500k runs.
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="falcon-mamba-7b",
+    family="ssm",
+    n_layers=64,
+    d_model=4096,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=65_024,
+    ssm_state=16,
+    expand=2,
+    block_pattern=("mamba",),
+    act="silu",
+)
+
+SMOKE = ModelConfig(
+    name="falcon-mamba-smoke",
+    family="ssm",
+    n_layers=4,
+    d_model=64,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=512,
+    ssm_state=8,
+    expand=2,
+    block_pattern=("mamba",),
+    act="silu",
+)

@@ -1,0 +1,36 @@
+"""internvl2-2b [vlm] — InternLM2 LM backbone; InternViT frontend STUBBED.
+
+24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92553.
+[arXiv:2404.16821; hf]
+
+The InternViT vision tower is a stub per the assignment: ``input_specs()``
+provides precomputed patch embeddings [B, 256, d_model] prefixed to the
+token sequence.
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=92_553,
+    vision_tokens=256,
+    act="silu",
+)
+
+SMOKE = ModelConfig(
+    name="internvl2-smoke",
+    family="vlm",
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab_size=512,
+    vision_tokens=8,
+    act="silu",
+)

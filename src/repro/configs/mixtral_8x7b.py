@@ -1,0 +1,38 @@
+"""mixtral-8x7b [moe] — 8 experts top-2, sliding-window attention (4096).
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000, MoE 8e top-2, SWA.
+[arXiv:2401.04088; hf]
+SWA bounds the decode KV cache to the window ⇒ long_500k decode runs.
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32_000,
+    n_experts=8,
+    top_k=2,
+    window=4096,
+    act="silu",
+)
+
+SMOKE = ModelConfig(
+    name="mixtral-smoke",
+    family="moe",
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=96,
+    vocab_size=512,
+    n_experts=4,
+    top_k=2,
+    capacity_factor=4.0,   # no-drop capacity for exact prefill/decode consistency tests
+    window=16,
+    act="silu",
+)

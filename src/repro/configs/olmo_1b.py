@@ -1,0 +1,36 @@
+"""olmo-1b [dense] — non-parametric LayerNorm, MHA (kv == heads).
+
+16L d_model=2048 16H (GQA kv=16) d_ff=8192 vocab=50304.
+[arXiv:2402.00838; hf]
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="olmo-1b",
+    family="dense",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab_size=50_304,
+    norm="ln_np",
+    nonparametric_ln=True,
+    act="silu",
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="olmo-1b-smoke",
+    family="dense",
+    n_layers=4,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab_size=512,
+    norm="ln_np",
+    nonparametric_ln=True,
+    act="silu",
+    tie_embeddings=True,
+)

@@ -1,0 +1,33 @@
+"""qwen2.5-32b [dense] — GQA with QKV bias.
+
+64L d_model=5120 40H (GQA kv=8) d_ff=27648 vocab=152064.
+[hf:Qwen/Qwen2.5-0.5B; hf]
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen2.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=27648,
+    vocab_size=152_064,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    act="silu",
+)
+
+SMOKE = ModelConfig(
+    name="qwen2.5-32b-smoke",
+    family="dense",
+    n_layers=4,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=160,
+    vocab_size=512,
+    qkv_bias=True,
+    act="silu",
+)

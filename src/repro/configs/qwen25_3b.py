@@ -1,0 +1,33 @@
+"""qwen2.5-3b [dense] — GQA kv=2, QKV bias.
+
+36L d_model=2048 16H (GQA kv=2) d_ff=11008 vocab=151936.
+[hf:Qwen/Qwen2.5-0.5B; hf]
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen2.5-3b",
+    family="dense",
+    n_layers=36,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=2,
+    d_ff=11008,
+    vocab_size=151_936,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    act="silu",
+)
+
+SMOKE = ModelConfig(
+    name="qwen2.5-3b-smoke",
+    family="dense",
+    n_layers=4,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab_size=512,
+    qkv_bias=True,
+    act="silu",
+)

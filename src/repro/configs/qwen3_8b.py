@@ -1,0 +1,35 @@
+"""qwen3-8b [dense] — GQA with per-head q/k RMSNorm (qk_norm).
+
+36L d_model=4096 32H (GQA kv=8) d_ff=12288 vocab=151936.
+[hf:Qwen/Qwen3-8B; hf]
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen3-8b",
+    family="dense",
+    n_layers=36,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=12288,
+    vocab_size=151_936,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    act="silu",
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-8b-smoke",
+    family="dense",
+    n_layers=4,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab_size=512,
+    head_dim=16,
+    qk_norm=True,
+    act="silu",
+)

@@ -1,0 +1,38 @@
+"""recurrentgemma-9b [hybrid] — RG-LRU + local attention, 2:1 pattern.
+
+38L d_model=4096 16H (MQA kv=1) d_ff=12288 vocab=256000, local window 2048.
+[arXiv:2402.19427; unverified]
+Pattern (rglru, rglru, attn) tiled over 38 layers: 12 full blocks + 2-layer
+rglru tail.
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    d_ff=12288,
+    vocab_size=256_000,
+    window=2048,
+    block_pattern=("rglru", "rglru", "attn"),
+    lru_width=4096,
+    act="silu",
+)
+
+SMOKE = ModelConfig(
+    name="recurrentgemma-9b-smoke",
+    family="hybrid",
+    n_layers=8,                      # 2 full pattern blocks + 2-layer tail
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=1,
+    d_ff=128,
+    vocab_size=512,
+    window=16,
+    block_pattern=("rglru", "rglru", "attn"),
+    lru_width=64,
+    act="silu",
+)

@@ -1,0 +1,42 @@
+"""whisper-large-v3 [audio] — encoder-decoder; conv frontend STUBBED.
+
+32L (enc) + 32L (dec) d_model=1280 20H (MHA kv=20) d_ff=5120 vocab=51866.
+[arXiv:2212.04356; unverified]
+
+The conv/mel frontend is a stub per the assignment: ``input_specs()``
+provides precomputed frame embeddings [B, 1500, d_model].  Decode shapes
+exercise the *decoder* (self-attn KV cache + cross-attention to the encoded
+frames).  Positional scheme: RoPE (deviation from Whisper's learned/sinusoid
+embeddings — backbone dims are what the roofline needs; noted in DESIGN.md).
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    n_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab_size=51_866,
+    act="gelu",
+    norm="ln",
+    encoder_layers=32,
+    encoder_seq=1500,
+)
+
+SMOKE = ModelConfig(
+    name="whisper-smoke",
+    family="audio",
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab_size=512,
+    act="gelu",
+    norm="ln",
+    encoder_layers=2,
+    encoder_seq=24,
+)

@@ -1,0 +1,35 @@
+"""The paper's contribution: optimal operator-state migration.
+
+Public API:
+    Assignment, migration_cost, migration_gain        (paper §2)
+    ssm, simple_ssm, brute_force, MigrationPlan       (paper §3)
+    oms, greedy_sequence                              (paper §4.1)
+    MTM, PartitionTable, pmc, mtm_aware_plan          (paper §4.2)
+    adhoc, greedy_trim, consistent_hashing            (baselines)
+    ElasticPlanner, TauSchedule                       (facade)
+"""
+from .intervals import (
+    Assignment,
+    balance_cap,
+    migration_cost,
+    migration_gain,
+    moved_tasks,
+    prefix_sum,
+    satisfies_balance,
+)
+from .ssm import Infeasible, MigrationPlan, brute_force, simple_ssm, ssm
+from .oms import SequenceResult, greedy_sequence, oms
+from .mtm import MTM, PMCResult, PartitionTable, mtm_aware_plan, pairwise_gain_matrix, pmc
+from .baselines import CHashResult, adhoc, consistent_hashing, greedy_trim
+from .planner import ElasticPlanner, TauSchedule
+
+__all__ = [
+    "Assignment", "balance_cap", "migration_cost", "migration_gain",
+    "moved_tasks", "prefix_sum", "satisfies_balance",
+    "Infeasible", "MigrationPlan", "brute_force", "simple_ssm", "ssm",
+    "SequenceResult", "greedy_sequence", "oms",
+    "MTM", "PMCResult", "PartitionTable", "mtm_aware_plan",
+    "pairwise_gain_matrix", "pmc",
+    "CHashResult", "adhoc", "consistent_hashing", "greedy_trim",
+    "ElasticPlanner", "TauSchedule",
+]

@@ -1,0 +1,138 @@
+"""Baseline migration strategies the paper compares against (§6).
+
+* ``adhoc``              — the Storm-default-scheduler analogue: split tasks
+                           into n' contiguous chunks of (near-)equal *task
+                           count*, assigned to nodes in id order.  Ignores
+                           state sizes and workloads entirely.
+* ``greedy_trim``        — a straightforward solution: keep old boundaries
+                           where feasible, push boundaries minimally left-to-
+                           right to satisfy the cap.  Cheap, but can cascade
+                           moves across all nodes.
+* ``consistent_hashing`` — classical ring placement ([19] in the paper).
+                           Task->node mapping is NOT contiguous, so it breaks
+                           the interval routing-table design and gives no
+                           balance guarantee; included to quantify exactly
+                           that trade-off (cost vs. balance violation).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .intervals import Assignment, balance_cap, prefix_sum, _EPS
+from .ssm import Infeasible, MigrationPlan, _plan
+
+
+def adhoc(
+    old: Assignment, n_new: int, w: np.ndarray, s: np.ndarray, tau: float
+) -> MigrationPlan:
+    """Equal-task-count contiguous chunks, node i <- chunk i (no matching)."""
+    m = old.m
+    edges = np.linspace(0, m, n_new + 1).round().astype(np.int64)
+    n_total = max(old.n_nodes, n_new)
+    ivs = [(int(edges[i]), int(edges[i + 1])) for i in range(n_new)]
+    ivs += [(m, m)] * (n_total - n_new)
+    return _plan(old, Assignment(m, tuple(ivs)), s)
+
+
+def greedy_trim(
+    old: Assignment, n_new: int, w: np.ndarray, s: np.ndarray, tau: float
+) -> MigrationPlan:
+    """Left-to-right water-filling: keep each old boundary if the interval it
+    closes fits under the cap, else trim; leftover tasks spill rightwards."""
+    m = old.m
+    w = np.asarray(w, dtype=np.float64)
+    Sw = prefix_sum(w)
+    cap = balance_cap(float(Sw[-1]), n_new, tau)
+    tol = cap * (1 + _EPS) + _EPS
+    old_items = old.nonempty()
+    old_bounds = [iv[1] for _, iv in old_items][: n_new - 1]
+    bounds = [0]
+    for i in range(n_new - 1):
+        lo = bounds[-1]
+        # largest feasible hi
+        hi_max = int(np.searchsorted(Sw, Sw[lo] + tol, side="right") - 1)
+        hi_max = max(hi_max, lo)
+        want = old_bounds[i] if i < len(old_bounds) else hi_max
+        hi = min(max(want, lo), hi_max, m)
+        bounds.append(hi)
+    bounds.append(m)
+    if Sw[m] - Sw[bounds[-2]] > tol:
+        # tail overloaded: fall back to right-to-left repair
+        for i in range(n_new - 1, 0, -1):
+            hi = bounds[i + 1]
+            lo_min = int(np.searchsorted(Sw, Sw[hi] - tol, side="left"))
+            if bounds[i] < lo_min:
+                bounds[i] = lo_min
+        if any(Sw[bounds[i + 1]] - Sw[bounds[i]] > tol for i in range(n_new)):
+            raise Infeasible("greedy_trim could not satisfy the cap")
+    n_total = max(old.n_nodes, n_new)
+    ivs: list = [(m, m)] * n_total
+    # assign interval i to the old node whose interval contained its lo
+    owner = old.owner_of()
+    taken = set()
+    free = []
+    for i in range(n_new):
+        lo, hi = bounds[i], bounds[i + 1]
+        if hi <= lo:
+            continue
+        cand = int(owner[lo]) if lo < m else -1
+        if cand >= 0 and cand not in taken:
+            ivs[cand] = (lo, hi)
+            taken.add(cand)
+        else:
+            free.append((lo, hi))
+    free_nodes = [i for i in range(n_total) if i not in taken]
+    for node, iv in zip(free_nodes, free):
+        ivs[node] = iv
+    return _plan(old, Assignment(m, tuple(ivs)), s)
+
+
+# ---------------------------------------------------------------------------
+# Consistent hashing (non-contiguous ownership; benchmark-only)
+# ---------------------------------------------------------------------------
+
+def _hash01(key: str) -> float:
+    h = hashlib.md5(key.encode()).digest()
+    return int.from_bytes(h[:8], "big") / 2**64
+
+
+@dataclass(frozen=True)
+class CHashResult:
+    owner_old: np.ndarray
+    owner_new: np.ndarray
+    cost: float                  # state bytes moved
+    max_load_ratio: float        # max_i W_i / (W/n')  (balance violation)
+
+
+def consistent_hashing(
+    m: int, n_old: int, n_new: int, w: np.ndarray, s: np.ndarray,
+    vnodes: int = 64, seed: int = 0,
+) -> CHashResult:
+    """Ring placement with ``vnodes`` virtual points per node.  Node ids are
+    stable, so growing/shrinking moves only arcs adjacent to the change."""
+    task_pos = np.array([_hash01(f"t{seed}:{j}") for j in range(m)])
+
+    def owners(n: int) -> np.ndarray:
+        pts, ids = [], []
+        for i in range(n):
+            for v in range(vnodes):
+                pts.append(_hash01(f"n{seed}:{i}:{v}"))
+                ids.append(i)
+        order = np.argsort(pts)
+        pts = np.asarray(pts)[order]
+        ids = np.asarray(ids)[order]
+        k = np.searchsorted(pts, task_pos, side="left") % len(pts)
+        return ids[k]
+
+    o_old, o_new = owners(n_old), owners(n_new)
+    s = np.asarray(s, dtype=np.float64)
+    w = np.asarray(w, dtype=np.float64)
+    cost = float(s[o_old != o_new].sum())
+    loads = np.zeros(n_new)
+    np.add.at(loads, o_new, w)
+    ideal = w.sum() / n_new
+    return CHashResult(o_old, o_new, cost, float(loads.max() / ideal))

@@ -1,0 +1,363 @@
+"""Task intervals, assignments, and gain/cost primitives (paper §2).
+
+Tasks are 0-indexed ``j ∈ [0, m)``.  A node's *task interval* is half-open
+``[lo, hi)``; an empty interval is ``(t, t)``.  The old assignment's nonempty
+intervals must be disjoint and collectively cover ``[0, m)`` (paper §2.1).
+
+A *partition* is a tuple of ``k+1`` nondecreasing boundaries
+``(0, b1, ..., m)`` describing ``k`` ordered contiguous intervals.
+
+All planner-side code is numpy (it runs on the controller host, like the
+paper's Nimbus-side strategy computation); the device-side executors and the
+PMC hot loop live elsewhere (``repro.runtime``, ``repro.kernels``).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Iterator, Optional, Sequence, Tuple
+
+import numpy as np
+
+Interval = Tuple[int, int]
+
+# Relative tolerance used for load-balance feasibility checks so that integer
+# workloads compare exactly (cap is a float (1+tau)W/n').
+_EPS = 1e-9
+
+
+def prefix_sum(v: np.ndarray) -> np.ndarray:
+    """Length m+1 prefix sums with S[0] = 0; measure of [lo,hi) = S[hi]-S[lo]."""
+    v = np.asarray(v, dtype=np.float64)
+    out = np.zeros(v.shape[0] + 1, dtype=np.float64)
+    np.cumsum(v, out=out[1:])
+    return out
+
+
+def measure(S: np.ndarray, lo: int, hi: int) -> float:
+    """Total (weight or state size) of tasks in [lo, hi) given prefix sums."""
+    if hi <= lo:
+        return 0.0
+    return float(S[hi] - S[lo])
+
+
+def overlap(a: Interval, b: Interval) -> Interval:
+    """Intersection of two intervals (may be empty: lo >= hi)."""
+    return (max(a[0], b[0]), min(a[1], b[1]))
+
+
+def overlap_measure(S: np.ndarray, a: Interval, b: Interval) -> float:
+    lo, hi = overlap(a, b)
+    return measure(S, lo, hi)
+
+
+def balance_cap(W: float, n_nodes: int, tau: float) -> float:
+    """Per-node workload cap (Definition 2.1): (1+tau) * W / n."""
+    if n_nodes <= 0:
+        raise ValueError("n_nodes must be >= 1")
+    return (1.0 + tau) * W / n_nodes
+
+
+@dataclass(frozen=True)
+class Assignment:
+    """A task-to-node assignment: node i owns ``intervals[i]``.
+
+    Node identity is positional.  ``intervals`` may contain empty intervals
+    (new nodes before a grow migration, removed nodes after a shrink).
+    """
+
+    m: int
+    intervals: Tuple[Interval, ...]
+
+    # -- constructors -----------------------------------------------------
+    @staticmethod
+    def from_boundaries(m: int, boundaries: Sequence[int]) -> "Assignment":
+        bs = list(boundaries)
+        ivs = tuple((int(bs[i]), int(bs[i + 1])) for i in range(len(bs) - 1))
+        return Assignment(m=m, intervals=ivs)
+
+    # -- basic accessors ---------------------------------------------------
+    @property
+    def n_nodes(self) -> int:
+        return len(self.intervals)
+
+    def nonempty(self) -> Tuple[Tuple[int, Interval], ...]:
+        """(node_id, interval) for nonempty intervals, sorted by interval lo."""
+        items = [(i, iv) for i, iv in enumerate(self.intervals) if iv[1] > iv[0]]
+        items.sort(key=lambda t: t[1][0])
+        return tuple(items)
+
+    def validate(self) -> None:
+        """Nonempty intervals must be disjoint and cover [0, m)."""
+        items = self.nonempty()
+        pos = 0
+        for _, (lo, hi) in items:
+            if lo != pos:
+                raise ValueError(f"intervals not contiguous at {pos}: got {lo}")
+            if hi <= lo:
+                raise ValueError("empty interval leaked into nonempty()")
+            pos = hi
+        if pos != self.m:
+            raise ValueError(f"intervals cover [0,{pos}) but m={self.m}")
+
+    def node_loads(self, w: np.ndarray) -> np.ndarray:
+        Sw = prefix_sum(w)
+        return np.array([measure(Sw, lo, hi) for lo, hi in self.intervals])
+
+    def owner_of(self) -> np.ndarray:
+        """owner[j] = node id owning task j.  Requires a valid assignment."""
+        owner = np.full(self.m, -1, dtype=np.int64)
+        for i, (lo, hi) in enumerate(self.intervals):
+            owner[lo:hi] = i
+        return owner
+
+    def padded(self, n_total: int) -> "Assignment":
+        """Pad with empty intervals up to n_total nodes."""
+        if n_total < self.n_nodes:
+            raise ValueError("cannot shrink by padding")
+        extra = tuple((self.m, self.m) for _ in range(n_total - self.n_nodes))
+        return Assignment(self.m, self.intervals + extra)
+
+
+def migration_gain(old: Assignment, new: Assignment, s: np.ndarray) -> float:
+    """Total state size that does NOT move (Definition 3.1)."""
+    if old.m != new.m:
+        raise ValueError("mismatched m")
+    Ss = prefix_sum(s)
+    n = max(old.n_nodes, new.n_nodes)
+    o, nw = old.padded(n), new.padded(n)
+    return float(
+        sum(
+            overlap_measure(Ss, o.intervals[i], nw.intervals[i])
+            for i in range(n)
+        )
+    )
+
+
+def migration_cost(old: Assignment, new: Assignment, s: np.ndarray) -> float:
+    """Total state size that moves between nodes (Definition 2.2)."""
+    Ss = prefix_sum(s)
+    total = measure(Ss, 0, old.m)
+    return total - migration_gain(old, new, s)
+
+
+def moved_tasks(old: Assignment, new: Assignment) -> np.ndarray:
+    """Boolean mask of tasks whose owner changes."""
+    return old.owner_of() != new.padded(max(old.n_nodes, new.n_nodes)).owner_of()
+
+
+def satisfies_balance(
+    assignment_or_bounds, w: np.ndarray, n_target: int, tau: float
+) -> bool:
+    """Definition 2.1 with cap computed for ``n_target`` nodes."""
+    Sw = prefix_sum(w)
+    cap = balance_cap(float(Sw[-1]), n_target, tau)
+    if isinstance(assignment_or_bounds, Assignment):
+        ivs = assignment_or_bounds.intervals
+    else:
+        bs = list(assignment_or_bounds)
+        ivs = [(bs[i], bs[i + 1]) for i in range(len(bs) - 1)]
+    return all(measure(Sw, lo, hi) <= cap * (1 + _EPS) + _EPS for lo, hi in ivs)
+
+
+# ---------------------------------------------------------------------------
+# Greedy covers (used by SSM for n_min and zero-gain filler construction).
+# ---------------------------------------------------------------------------
+
+def next_jump(w: np.ndarray, cap: float) -> np.ndarray:
+    """nxt[a] = largest b (a <= b <= m) with weight([a,b)) <= cap.
+
+    Two-pointer, O(m).  nxt[a] == a means task a alone exceeds the cap, which
+    makes any contiguous partition infeasible.
+    """
+    m = len(w)
+    nxt = np.zeros(m + 1, dtype=np.int64)
+    nxt[m] = m
+    b = 0
+    acc = 0.0
+    tol = cap * (1 + _EPS) + _EPS
+    for a in range(m):
+        if b < a:
+            b = a
+            acc = 0.0
+        while b < m and acc + w[b] <= tol:
+            acc += w[b]
+            b += 1
+        nxt[a] = b
+        acc -= w[a]
+    return nxt
+
+
+def min_cover_counts(nxt: np.ndarray) -> np.ndarray:
+    """cnt[a] = min #intervals (each <= cap) covering [a, m); inf if infeasible."""
+    m = len(nxt) - 1
+    INF = np.iinfo(np.int64).max // 2
+    cnt = np.full(m + 1, INF, dtype=np.int64)
+    cnt[m] = 0
+    for a in range(m - 1, -1, -1):
+        if nxt[a] > a and cnt[nxt[a]] < INF:
+            cnt[a] = 1 + cnt[nxt[a]]
+    return cnt
+
+
+def greedy_boundaries(nxt: np.ndarray, lo: int, hi: int) -> list:
+    """Greedy split of [lo, hi) into the minimum number of cap-feasible
+    intervals; returns boundary list [lo, ..., hi].  Raises if infeasible."""
+    bs = [lo]
+    a = lo
+    while a < hi:
+        b = min(int(nxt[a]), hi)
+        if b <= a:
+            raise ValueError("single task exceeds balance cap; infeasible")
+        bs.append(b)
+        a = b
+    return bs
+
+
+# ---------------------------------------------------------------------------
+# Partition enumeration (OMS / PMC).  Strictly increasing boundaries (no
+# empty intervals: an empty interval is never useful for the optimum and
+# bloats the MDP state space).
+# ---------------------------------------------------------------------------
+
+def enumerate_balanced_partitions(
+    w: np.ndarray, k: int, tau: float, limit: Optional[int] = None
+) -> Iterator[Tuple[int, ...]]:
+    """Yield boundary tuples (0, b1, ..., m) of cap-feasible partitions of
+    [0, m) into exactly k nonempty intervals."""
+    m = len(w)
+    Sw = prefix_sum(w)
+    cap = balance_cap(float(Sw[-1]), k, tau)
+    tol = cap * (1 + _EPS) + _EPS
+    count = 0
+
+    def rec(start: int, parts_left: int, acc: Tuple[int, ...]):
+        nonlocal count
+        if limit is not None and count >= limit:
+            return
+        if parts_left == 1:
+            if Sw[m] - Sw[start] <= tol:
+                count += 1
+                yield acc + (m,)
+            return
+        # next boundary b: start < b <= m - (parts_left - 1)
+        for b in range(start + 1, m - parts_left + 2):
+            if Sw[b] - Sw[start] > tol:
+                break
+            yield from rec(b, parts_left - 1, acc + (b,))
+
+    yield from rec(0, k, (0,))
+
+
+def count_balanced_partitions(w: np.ndarray, k: int, tau: float) -> int:
+    """DP count of cap-feasible partitions into k nonempty intervals."""
+    m = len(w)
+    Sw = prefix_sum(w)
+    cap = balance_cap(float(Sw[-1]), k, tau)
+    tol = cap * (1 + _EPS) + _EPS
+    # cnt[j][b] = #ways to split [0, b) into j feasible intervals
+    cnt = np.zeros((k + 1, m + 1), dtype=np.int64)
+    cnt[0][0] = 1
+    for j in range(1, k + 1):
+        for b in range(1, m + 1):
+            lo = int(np.searchsorted(Sw, Sw[b] - tol, side="left"))
+            cnt[j][b] = cnt[j - 1][lo:b].sum()
+    return int(cnt[k][m])
+
+
+# ---------------------------------------------------------------------------
+# Non-crossing interval matching (used by OMS edge costs, MTM runtime step,
+# and as the reference for the kernels/interval_gain Pallas kernel).
+# ---------------------------------------------------------------------------
+
+def match_gain(
+    old_items: Sequence[Tuple[int, Interval]],
+    new_bounds: Sequence[int],
+    Ss: np.ndarray,
+) -> Tuple[float, list]:
+    """Max total gain of assigning the ordered new intervals (given by
+    ``new_bounds``) to distinct old nodes, plus the matching itself.
+
+    The optimal bipartite matching between two families of disjoint ordered
+    intervals is non-crossing (crossing pairs cannot both have positive
+    gain), so an LCS-style DP is exact:
+        g[i][j] = max(g[i-1][j], g[i][j-1], g[i-1][j-1] + ov(i, j)).
+
+    Returns (gain, pairs) where pairs = [(old_pos, new_pos), ...] for matched
+    pairs with positive overlap.
+    """
+    n_old = len(old_items)
+    k = len(new_bounds) - 1
+    g = np.zeros((n_old + 1, k + 1), dtype=np.float64)
+    choice = np.zeros((n_old + 1, k + 1), dtype=np.int8)
+    for i in range(1, n_old + 1):
+        lo_i, hi_i = old_items[i - 1][1]
+        for j in range(1, k + 1):
+            ov = overlap_measure(
+                Ss, (lo_i, hi_i), (new_bounds[j - 1], new_bounds[j])
+            )
+            best, c = g[i - 1][j], 1
+            if g[i][j - 1] > best:
+                best, c = g[i][j - 1], 2
+            if g[i - 1][j - 1] + ov > best:
+                best, c = g[i - 1][j - 1] + ov, 3
+            g[i][j] = best
+            choice[i][j] = c
+    # reconstruct
+    pairs = []
+    i, j = n_old, k
+    while i > 0 and j > 0:
+        c = choice[i][j]
+        if c == 1:
+            i -= 1
+        elif c == 2:
+            j -= 1
+        else:
+            ov = overlap_measure(
+                Ss,
+                old_items[i - 1][1],
+                (new_bounds[j - 1], new_bounds[j]),
+            )
+            if ov > 0:
+                pairs.append((i - 1, j - 1))
+            i, j = i - 1, j - 1
+    pairs.reverse()
+    return float(g[n_old][k]), pairs
+
+
+def realize_partition(
+    old: Assignment,
+    new_bounds: Sequence[int],
+    s: np.ndarray,
+    n_target: int,
+) -> "Assignment":
+    """Turn a target *partition* into a concrete *assignment* by matching its
+    intervals to old nodes to maximize gain (paper §4.1 line 3), assigning
+    unmatched intervals to free nodes.
+
+    The result has ``max(old.n_nodes, n_target)`` positional nodes; nodes not
+    given an interval receive the empty interval (they are the removed nodes
+    when shrinking).
+    """
+    Ss = prefix_sum(s)
+    old_items = old.nonempty()
+    _, pairs = match_gain(old_items, new_bounds, Ss)
+    k = len(new_bounds) - 1
+    n_total = max(old.n_nodes, n_target)
+    ivs: list = [(old.m, old.m)] * n_total
+    taken_new = set()
+    taken_old = set()
+    for old_pos, new_pos in pairs:
+        node_id = old_items[old_pos][0]
+        ivs[node_id] = (int(new_bounds[new_pos]), int(new_bounds[new_pos + 1]))
+        taken_new.add(new_pos)
+        taken_old.add(node_id)
+    free_nodes = [i for i in range(n_total) if i not in taken_old]
+    free_ivs = [j for j in range(k) if j not in taken_new]
+    # Any leftover interval goes to any unused node; gain stays optimal (see
+    # core/ssm.py docstring for the argument), order is deterministic.
+    for node_id, j in zip(free_nodes, free_ivs):
+        ivs[node_id] = (int(new_bounds[j]), int(new_bounds[j + 1]))
+    if len(free_ivs) > len(free_nodes):
+        raise AssertionError("more intervals than nodes")
+    return Assignment(old.m, tuple(ivs))

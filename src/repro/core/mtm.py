@@ -1,0 +1,381 @@
+"""MTM-aware migration (paper §2.2, §4.2): migration transition matrix,
+PMC value iteration (Fig. 16), and the runtime MTM-aware planner.
+
+The MDP: states are balanced task *partitions* (Lemma 4.2 — node permutations
+never change future costs, so partitions suffice).  From a partition P with
+k(P) intervals the environment draws the next node count n' from the MTM row
+of k(P); the controller then picks the cheapest next partition.  The
+projected cost (Def. 2.7/2.8) is the fixed point of
+
+    C[P] = sum_{n'} MTM[k(P), n']  ·  min_{P' in Parts(n')}
+                ( cost(P -> P') + gamma · C[P'] )
+
+which is a gamma-contraction, so value iteration converges geometrically.
+The paper's Fig. 16 writes the expectation over next *partitions*; with the
+controller free to choose P' given n' (Def. 2.8 "find a migration strategy"),
+the inner min over Parts(n') is the faithful Bellman form, and reduces to the
+paper's wording when each row has a single reachable partition.
+
+Cost between two full partitions of [0, m) is total_state − the max gain of a
+non-crossing interval matching, computed *batched* over all partition pairs
+(numpy here; ``repro.kernels.interval_gain`` provides the Pallas/TPU version
+of the same batched DP, validated against ``pairwise_gain_matrix``).
+
+Beyond the paper: ``boundary_grid`` coarsens the partition space by snapping
+boundaries to multiples of g, which cuts PMC precompute from "hundreds of
+minutes on a Spark cluster" (paper Fig. 6) to seconds at equal m — at a small,
+measured optimality loss (see benchmarks/fig6_pmc_time.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .intervals import (
+    Assignment,
+    balance_cap,
+    match_gain,
+    measure,
+    prefix_sum,
+    realize_partition,
+    _EPS,
+)
+from .ssm import Infeasible, MigrationPlan, _plan
+
+
+# ---------------------------------------------------------------------------
+# Migration transition matrix
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MTM:
+    """Row-stochastic matrix over node counts [n_min, n_max]."""
+
+    n_min: int
+    n_max: int
+    probs: np.ndarray  # [n_max-n_min+1, n_max-n_min+1]
+
+    def __post_init__(self):
+        p = self.probs
+        if p.shape != (self.size, self.size):
+            raise ValueError("MTM shape mismatch")
+        if (p < -1e-12).any():
+            raise ValueError("negative probability")
+        rs = p.sum(axis=1)
+        if not np.allclose(rs, 1.0, atol=1e-6):
+            raise ValueError(f"rows must sum to 1, got {rs}")
+
+    @property
+    def size(self) -> int:
+        return self.n_max - self.n_min + 1
+
+    def row(self, n: int) -> np.ndarray:
+        return self.probs[n - self.n_min]
+
+    @staticmethod
+    def estimate(history: Sequence[int], n_min: int, n_max: int,
+                 smoothing: float = 1e-3) -> "MTM":
+        """Count n->n' transitions in a node-count history (paper §2.2:
+        "computed using statistics of past server logs").  Laplace smoothing
+        keeps unseen transitions reachable."""
+        size = n_max - n_min + 1
+        counts = np.full((size, size), smoothing, dtype=np.float64)
+        for a, b in zip(history[:-1], history[1:]):
+            if a == b:
+                continue  # no migration between equal counts (paper §6)
+            if n_min <= a <= n_max and n_min <= b <= n_max:
+                counts[a - n_min, b - n_min] += 1.0
+        probs = counts / counts.sum(axis=1, keepdims=True)
+        return MTM(n_min=n_min, n_max=n_max, probs=probs)
+
+    @staticmethod
+    def uniform(n_min: int, n_max: int) -> "MTM":
+        size = n_max - n_min + 1
+        return MTM(n_min, n_max, np.full((size, size), 1.0 / size))
+
+
+# ---------------------------------------------------------------------------
+# Partition tables
+# ---------------------------------------------------------------------------
+
+def grid_partitions(
+    w: np.ndarray, k: int, tau: float, grid: int = 1,
+    limit: Optional[int] = None,
+) -> List[Tuple[int, ...]]:
+    """Balanced partitions of [0, m) into k intervals whose interior
+    boundaries are multiples of ``grid`` (grid=1 reproduces the full space)."""
+    m = len(w)
+    Sw = prefix_sum(w)
+    cap = balance_cap(float(Sw[-1]), k, tau)
+    tol = cap * (1 + _EPS) + _EPS
+    pts = [b for b in range(grid, m, grid)] + [m]
+    out: List[Tuple[int, ...]] = []
+
+    def rec(start: int, left: int, acc: Tuple[int, ...]):
+        if limit is not None and len(out) >= limit:
+            return
+        if left == 1:
+            if Sw[m] - Sw[start] <= tol:
+                out.append(acc + (m,))
+            return
+        for b in pts:
+            if b <= start:
+                continue
+            if b > m - (left - 1):
+                break
+            if Sw[b] - Sw[start] > tol:
+                break
+            rec(b, left - 1, acc + (b,))
+
+    rec(0, k, (0,))
+    return out
+
+
+@dataclass
+class PartitionTable:
+    """Candidate partitions into UP TO n_max intervals (paper §4.2: "every
+    partitioning of the m tasks into up to n_max task intervals") padded to
+    a common interval count K (empty tail intervals at m).
+
+    A row with j nonempty intervals is feasible on a k-node cluster (k ≥ j)
+    iff its max interval load fits the k-cap (1+τ)W/k — the k−j spare nodes
+    idle, exactly like SSM's free nodes."""
+
+    m: int
+    n_counts: List[int]                 # nonempty interval count per row
+    bounds: np.ndarray                  # [Q, K+1] int64, padded with m
+    by_k: Dict[int, np.ndarray]         # legacy exact-count row indices
+    max_load: np.ndarray = None         # [Q] max interval load (build w)
+    total_w: float = 0.0
+    tau: float = 0.0
+    n_min: int = 0
+    n_max: int = 0
+
+    def feasible_rows(self, k: int) -> np.ndarray:
+        """Rows usable as the target of a migration onto k nodes."""
+        cap = balance_cap(self.total_w, k, self.tau) * (1 + _EPS) + _EPS
+        counts = np.asarray(self.n_counts)
+        return np.nonzero((counts <= k) & (self.max_load <= cap))[0]
+
+    @staticmethod
+    def build(
+        w: np.ndarray, n_min: int, n_max: int, tau: float,
+        grid: int = 1, limit_per_k: Optional[int] = None,
+        seed: int = 0,
+    ) -> "PartitionTable":
+        """``limit_per_k`` caps the per-k partition count by *uniform
+        subsampling* of the enumerated space (deterministic), not by
+        lexicographic truncation (which would bias the table toward
+        left-heavy boundaries)."""
+        m = len(w)
+        rng = np.random.default_rng(seed)
+        # enumerate generously, subsample down to the limit
+        enum_cap = None if limit_per_k is None else 50 * limit_per_k
+        rows: List[Tuple[int, ...]] = []
+        counts: List[int] = []
+        # "up to n_max" intervals: a j-interval partition can serve a k-node
+        # cluster (j ≤ k) iff it fits the k-cap; j below k/(1+tau) can never
+        # fit, so enumerate j from that bound upward.
+        j_lo = max(1, int(np.ceil(n_min / (1.0 + tau) - _EPS)))
+        any_feasible_per_k = {k: False for k in range(n_min, n_max + 1)}
+        Sw = prefix_sum(np.asarray(w, dtype=np.float64))
+        W = float(Sw[-1])
+        for j in range(j_lo, n_max + 1):
+            # enumerate against the loosest cap this j could ever face:
+            # cap(k_loosest) = (1+tau)·W/k_loosest expressed as a j-cap
+            k_loosest = max(j, n_min)
+            tau_eff = (1.0 + tau) * j / k_loosest - 1.0
+            parts = grid_partitions(w, j, tau_eff, grid=grid,
+                                    limit=enum_cap)
+            if not parts and grid > 1:
+                parts = grid_partitions(w, j, tau_eff, grid=1,
+                                        limit=enum_cap)
+            if limit_per_k is not None and len(parts) > limit_per_k:
+                idx = rng.choice(len(parts), limit_per_k, replace=False)
+                parts = [parts[i] for i in sorted(idx)]
+            rows.extend(parts)
+            counts.extend([j] * len(parts))
+        if not rows:
+            raise Infeasible(f"no balanced partition at any count, tau={tau}")
+        K = max(len(r) - 1 for r in rows)
+        Q = len(rows)
+        bounds = np.full((Q, K + 1), m, dtype=np.int64)
+        bounds[:, 0] = 0
+        for i, r in enumerate(rows):
+            bounds[i, : len(r)] = r
+        loads = np.diff(Sw[bounds], axis=1)
+        max_load = loads.max(axis=1)
+        by_k: Dict[int, np.ndarray] = {}
+        counts_a = np.asarray(counts)
+        for k in range(n_min, n_max + 1):
+            by_k[k] = np.nonzero(counts_a == k)[0]
+        table = PartitionTable(m=m, n_counts=counts, bounds=bounds,
+                               by_k=by_k, max_load=max_load, total_w=W,
+                               tau=tau, n_min=n_min, n_max=n_max)
+        for k in range(n_min, n_max + 1):
+            if len(table.feasible_rows(k)) == 0:
+                raise Infeasible(
+                    f"no balanced partition for k={k}, tau={tau}")
+        return table
+
+    @property
+    def Q(self) -> int:
+        return self.bounds.shape[0]
+
+    @property
+    def K(self) -> int:
+        return self.bounds.shape[1] - 1
+
+
+# ---------------------------------------------------------------------------
+# Batched pairwise non-crossing matching gain
+# ---------------------------------------------------------------------------
+
+def pairwise_gain_matrix(
+    a_bounds: np.ndarray, b_bounds: np.ndarray, Ss: np.ndarray,
+    chunk: int = 256,
+) -> np.ndarray:
+    """gain[i, j] = max non-crossing matching gain between partitions
+    a_bounds[i] and b_bounds[j].  Batched LCS-style DP, O(K^2) sequential
+    steps, each vectorized over a [chunk, Qb] pair block.
+
+    This is the numpy reference for the Pallas ``interval_gain`` kernel.
+    """
+    Qa, K1 = a_bounds.shape
+    Qb, K2 = b_bounds.shape
+    Ka, Kb = K1 - 1, K2 - 1
+    Ss = np.asarray(Ss, dtype=np.float64)
+    out = np.empty((Qa, Qb), dtype=np.float64)
+    b_lo = Ss[b_bounds[:, :-1]]                      # [Qb, Kb] prefix at lo
+    b_hi = Ss[b_bounds[:, 1:]]
+    for c0 in range(0, Qa, chunk):
+        c1 = min(c0 + chunk, Qa)
+        A = a_bounds[c0:c1]
+        a_lo = Ss[A[:, :-1]][:, None, :, None]        # [C,1,Ka,1]
+        a_hi = Ss[A[:, 1:]][:, None, :, None]
+        ov = np.minimum(a_hi, b_hi[None, :, None, :]) - np.maximum(
+            a_lo, b_lo[None, :, None, :]
+        )                                             # [C,Qb,Ka,Kb]
+        np.maximum(ov, 0.0, out=ov)
+        # DP over (i, j); g has shape [C, Qb]
+        prev = np.zeros((c1 - c0, Qb, Kb + 1))
+        for i in range(1, Ka + 1):
+            cur = np.zeros_like(prev)
+            for j in range(1, Kb + 1):
+                cur[:, :, j] = np.maximum(
+                    np.maximum(prev[:, :, j], cur[:, :, j - 1]),
+                    prev[:, :, j - 1] + ov[:, :, i - 1, j - 1],
+                )
+            prev = cur
+        out[c0:c1] = prev[:, :, Kb]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PMC — projected migration cost, value iteration (Fig. 16)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PMCResult:
+    table: PartitionTable
+    values: np.ndarray          # C[P, k], [Q, n_range] (MDP state incl. k)
+    cost: np.ndarray            # pairwise migration cost, [Q, Q]
+    iterations: int
+    gamma: float
+    mtm: MTM
+
+
+def pmc(
+    table: PartitionTable,
+    s: np.ndarray,
+    mtm: MTM,
+    gamma: float,
+    tol: float = 1e-6,
+    max_iters: int = 10_000,
+    gain_fn=pairwise_gain_matrix,
+) -> PMCResult:
+    """Value-iterate the projected migration cost.
+
+    MDP state = (partition, cluster size k): a j-interval partition may run
+    on any k ≥ j whose cap it satisfies (idle nodes = SSM's free nodes), so
+    the chain row is k's, not j's:
+
+        C[P, k] = Σ_k' M[k,k'] · min_{P' feasible@k'} (c(P→P') + γ·C[P',k'])
+
+    ``gain_fn`` computes the batched pairwise matching gain — swap in the
+    Pallas kernel wrapper (kernels.ops.pairwise_gain) to run the hot loop on
+    TPU; the numpy reference is the default.
+    """
+    Ss = prefix_sum(s)
+    total_state = float(Ss[-1])
+    gain = gain_fn(table.bounds, table.bounds, Ss)
+    cost = total_state - gain
+    np.maximum(cost, 0.0, out=cost)
+
+    Q = table.Q
+    nk = mtm.size
+    feas = {k: table.feasible_rows(k) for k in range(mtm.n_min,
+                                                     mtm.n_max + 1)}
+    V = np.zeros((Q, nk), dtype=np.float64)
+    it = 0
+    if gamma == 0.0:
+        max_iters = 1  # single sweep fixes V = E[min immediate cost]
+    for it in range(1, max_iters + 1):
+        # best next-step cost into each feasible cluster size
+        best_to_k = np.full((Q, nk), np.inf)
+        for k, idx in feas.items():
+            ki = k - mtm.n_min
+            tgt = cost[:, idx] + gamma * V[idx, ki][None, :]
+            best_to_k[:, ki] = tgt.min(axis=1)
+        Vn = best_to_k @ mtm.probs.T            # [Q, nk]: E over next k'
+        delta = float(np.abs(Vn - V).max())
+        V = Vn
+        if delta < tol * max(1.0, total_state):
+            break
+    return PMCResult(table=table, values=V, cost=cost, iterations=it,
+                     gamma=gamma, mtm=mtm)
+
+
+# ---------------------------------------------------------------------------
+# Runtime planner
+# ---------------------------------------------------------------------------
+
+def mtm_aware_plan(
+    old: Assignment,
+    n_new: int,
+    s: np.ndarray,
+    pmc_result: PMCResult,
+) -> MigrationPlan:
+    """Definition 2.8: minimize immediate cost + gamma * projected cost.
+
+    Immediate cost is computed against the *concrete* old assignment (its
+    node ids matter for the first hop); the projected cost is a pure function
+    of the target partition (Lemma 4.2), looked up from the PMC table.
+    """
+    table = pmc_result.table
+    idx = table.feasible_rows(n_new)
+    if len(idx) == 0:
+        raise Infeasible(f"PMC table has no partitions for n'={n_new}")
+    s = np.asarray(s, dtype=np.float64)
+    Ss = prefix_sum(s)
+    total_state = float(Ss[-1])
+    old_items = old.nonempty()
+    ki = n_new - pmc_result.mtm.n_min
+    best_val, best_row = np.inf, -1
+    for row in idx:
+        bounds = [int(b) for b in table.bounds[row]]
+        # strip padded tail (repeated m) down to the real boundary list
+        while len(bounds) > 2 and bounds[-2] == table.m:
+            bounds.pop()
+        g, _ = match_gain(old_items, bounds, Ss)
+        val = (total_state - g) + pmc_result.gamma * \
+            pmc_result.values[row, ki]
+        if val < best_val - 1e-12:
+            best_val, best_row = val, row
+    bounds = [int(b) for b in table.bounds[best_row]]
+    while len(bounds) > 2 and bounds[-2] == table.m:
+        bounds.pop()
+    new = realize_partition(old, bounds, s, n_new)
+    return _plan(old, new, s)

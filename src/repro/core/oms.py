@@ -1,0 +1,160 @@
+"""Optimal migration sequence — OMS (paper §4.1, Fig. 15).
+
+The paper's OMS enumerates, for the first migration, every balanced
+partitioning of the m tasks into n_1 intervals, realizes the best matching
+against the current assignment, and recurses on the remaining p-1 migrations.
+That recursion re-solves identical sub-problems (the sub-problem depends only
+on the *partition* reached, by Lemma 4.1 — node permutations do not change
+any subsequent cost).  We therefore implement the same optimum as a layered
+shortest-path DP over partitions:
+
+    layer 0:            the current (concrete) assignment
+    layer i (1..p):     all τ_i-balanced partitions into n_i intervals
+    edge cost(A → B):   total_state − non-crossing max-matching gain(A, B)
+
+which visits each (partition, layer) pair once.  ``oms_cost_lower_bound``
+exposes the exact optimum; ``oms`` additionally realizes the concrete
+assignment sequence (intervals pinned to node ids) via maximum-gain matching,
+step by step — Lemma 4.1 guarantees the realized sequence achieves the DP
+cost.  Both are exponential in m via the partition count, like the paper;
+they are oracles / PMC building blocks, not the online planner.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .intervals import (
+    Assignment,
+    enumerate_balanced_partitions,
+    match_gain,
+    measure,
+    migration_cost,
+    prefix_sum,
+    realize_partition,
+)
+from .ssm import Infeasible, MigrationPlan, _plan
+
+
+def partition_items(bounds: Sequence[int]) -> Tuple[Tuple[int, Tuple[int, int]], ...]:
+    """View a boundary tuple as ordered (pos, interval) items for matching."""
+    return tuple(
+        (i, (int(bounds[i]), int(bounds[i + 1]))) for i in range(len(bounds) - 1)
+    )
+
+
+def partition_gain(
+    a_bounds: Sequence[int], b_bounds: Sequence[int], Ss: np.ndarray
+) -> float:
+    """Max non-crossing matching gain between two full partitions of [0, m)."""
+    g, _ = match_gain(partition_items(a_bounds), list(b_bounds), Ss)
+    return g
+
+
+@dataclass(frozen=True)
+class SequenceResult:
+    plans: Tuple[MigrationPlan, ...]
+    total_cost: float
+
+
+def enumerate_layers(
+    w: np.ndarray,
+    targets: Sequence[Tuple[int, float]],
+    limit_per_layer: Optional[int] = None,
+) -> List[List[Tuple[int, ...]]]:
+    """Balanced partitions for each (n_i, tau_i) migration target."""
+    layers: List[List[Tuple[int, ...]]] = []
+    for n_i, tau_i in targets:
+        parts = list(
+            enumerate_balanced_partitions(w, n_i, tau_i, limit=limit_per_layer)
+        )
+        if not parts:
+            raise Infeasible(
+                f"no balanced partition for n'={n_i}, tau={tau_i}"
+            )
+        layers.append(parts)
+    return layers
+
+
+def oms(
+    old: Assignment,
+    targets: Sequence[Tuple[int, float]],
+    w: np.ndarray,
+    s: np.ndarray,
+    limit_per_layer: Optional[int] = None,
+) -> SequenceResult:
+    """Exact optimal migration sequence (Definition 2.4).
+
+    ``targets`` is the sequence of (n_i, tau_i).  Returns the realized plans
+    whose summed cost equals the layered-DP optimum.
+    """
+    if not targets:
+        return SequenceResult(plans=(), total_cost=0.0)
+    w = np.asarray(w, dtype=np.float64)
+    s = np.asarray(s, dtype=np.float64)
+    Ss = prefix_sum(s)
+    total_state = measure(Ss, 0, old.m)
+    layers = enumerate_layers(w, targets, limit_per_layer)
+
+    # forward DP: best[i][j] = min cost of reaching partition j of layer i
+    old_items = old.nonempty()
+    first = layers[0]
+    best = np.array(
+        [total_state - match_gain(old_items, list(b), Ss)[0] for b in first]
+    )
+    back: List[np.ndarray] = [np.full(len(first), -1, dtype=np.int64)]
+    for li in range(1, len(layers)):
+        cur = layers[li]
+        prev = layers[li - 1]
+        nb = np.full(len(cur), np.inf)
+        bk = np.full(len(cur), -1, dtype=np.int64)
+        for jc, bc in enumerate(cur):
+            for jp, bp in enumerate(prev):
+                c = best[jp] + total_state - partition_gain(bp, bc, Ss)
+                if c < nb[jc]:
+                    nb[jc], bk[jc] = c, jp
+        best, _ = nb, back.append(bk)
+    # backtrack partition path
+    j = int(np.argmin(best))
+    total = float(best[j])
+    path = [j]
+    for li in range(len(layers) - 1, 0, -1):
+        j = int(back[li][j])
+        path.append(j)
+    path.reverse()
+
+    # realize assignments along the path
+    plans: List[MigrationPlan] = []
+    cur_assign = old
+    for li, j in enumerate(path):
+        bounds = layers[li][j]
+        n_i = targets[li][0]
+        new_assign = realize_partition(cur_assign, list(bounds), s, n_i)
+        plans.append(_plan(cur_assign, new_assign, s))
+        cur_assign = new_assign
+    realized = sum(p.cost for p in plans)
+    assert abs(realized - total) < 1e-6 * max(1.0, abs(total)), (realized, total)
+    return SequenceResult(plans=tuple(plans), total_cost=realized)
+
+
+def greedy_sequence(
+    old: Assignment,
+    targets: Sequence[Tuple[int, float]],
+    w: np.ndarray,
+    s: np.ndarray,
+    planner=None,
+) -> SequenceResult:
+    """Apply optimal *single-step* migration at each step (the paper's
+    baseline for Table 1): per-step optimal, sequence-suboptimal."""
+    from .ssm import ssm as ssm_solver
+
+    solver = planner or ssm_solver
+    plans: List[MigrationPlan] = []
+    cur = old
+    for n_i, tau_i in targets:
+        p = solver(cur, n_i, w, s, tau_i)
+        plans.append(p)
+        cur = p.new
+    return SequenceResult(plans=tuple(plans), total_cost=sum(p.cost for p in plans))

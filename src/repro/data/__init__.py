@@ -1,0 +1,10 @@
+from .pipeline import SyntheticLM, host_shard_batch
+from .streaming import (
+    BurstyZipfStream, node_count_trace, task_state_sizes, task_workloads,
+)
+
+__all__ = [
+    "SyntheticLM", "host_shard_batch",
+    "BurstyZipfStream", "node_count_trace", "task_state_sizes",
+    "task_workloads",
+]

@@ -1,0 +1,80 @@
+"""Training data pipeline.
+
+``SyntheticLM`` is an infinite, deterministic, Zipf-distributed token stream
+(the offline container has no corpus; determinism makes training runs and
+checkpoint-restart tests reproducible).  The pipeline is host-sharded: each
+host materializes only its slice of the global batch, and a background
+prefetch thread keeps ``prefetch`` batches ready — the standard input-bound
+mitigation on real pods.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+@dataclass
+class SyntheticLM:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.1
+    n_hosts: int = 1
+    host_id: int = 0
+    prefetch: int = 2
+
+    def __post_init__(self):
+        if self.global_batch % self.n_hosts:
+            raise ValueError("global_batch must divide evenly across hosts")
+        self.host_batch = self.global_batch // self.n_hosts
+        # stationary Zipf over the vocab, renormalized (deterministic)
+        probs = 1.0 / np.arange(1, self.vocab_size + 1) ** self.zipf_a
+        self._probs = probs / probs.sum()
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        """Deterministic batch for a global step (restart-safe: re-seeding by
+        step means checkpoint-restart replays the identical stream)."""
+        rng = np.random.default_rng(
+            (self.seed, step, self.host_id))
+        toks = rng.choice(
+            self.vocab_size, size=(self.host_batch, self.seq_len),
+            p=self._probs).astype(np.int32)
+        return {"tokens": toks}
+
+    def batches(self, start_step: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+        """Prefetching iterator from ``start_step``."""
+        q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
+        stop = threading.Event()
+
+        def worker():
+            step = start_step
+            while not stop.is_set():
+                try:
+                    q.put(self.batch_at(step), timeout=0.5)
+                    step += 1
+                except queue.Full:
+                    continue
+
+        t = threading.Thread(target=worker, daemon=True)
+        t.start()
+        try:
+            while True:
+                yield q.get()
+        finally:
+            stop.set()
+
+
+def host_shard_batch(batch: Dict[str, np.ndarray], n_hosts: int,
+                     host_id: int) -> Dict[str, np.ndarray]:
+    """Slice a global batch to one host's rows (batch axis 0)."""
+    out = {}
+    for k, v in batch.items():
+        b = v.shape[0]
+        per = b // n_hosts
+        out[k] = v[host_id * per : (host_id + 1) * per]
+    return out

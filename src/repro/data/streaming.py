@@ -1,0 +1,91 @@
+"""Synthetic bursty data stream (paper §6 workload analogue).
+
+The paper evaluates on a Twitter crawl: tweet rate varies hour-to-hour, word
+frequencies are Zipfian, and topical bursts skew individual hash buckets.
+That dataset is not redistributable, so benchmarks use this generator, which
+reproduces the three properties the migration algorithms are sensitive to:
+
+1. diurnal total-rate variation       -> node-count trace (paper: nodes
+                                         proportional to tweets/hour, in [8,16])
+2. Zipfian task (hash-bucket) loads   -> skewed w_j
+3. transient per-topic bursts         -> sudden w_j spikes forcing rebalances
+
+``task_state_sizes`` models per-task operator-state growth (word counters
+within a sliding window): state ∝ distinct-weighted recent volume.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class BurstyZipfStream:
+    """Per-interval task workload generator."""
+
+    m_tasks: int = 64
+    zipf_a: float = 1.1              # word-frequency skew
+    diurnal_amp: float = 0.4         # total-rate daily swing (fraction)
+    burst_prob: float = 0.15         # p(burst starts) per interval
+    burst_mult: float = 6.0          # burst multiplies one task's load
+    burst_len: int = 3               # intervals a burst lasts
+    base_rate: float = 10_000.0      # items per interval
+    seed: int = 0
+
+    def intervals(self, n: int) -> np.ndarray:
+        """Return w of shape [n, m_tasks]: per-interval task workloads."""
+        rng = np.random.default_rng(self.seed)
+        # stationary Zipf shares over tasks (hash buckets aggregate words;
+        # shuffle so heavy buckets are not adjacent)
+        shares = 1.0 / np.arange(1, self.m_tasks + 1) ** self.zipf_a
+        rng.shuffle(shares)
+        shares /= shares.sum()
+        w = np.zeros((n, self.m_tasks))
+        active: list = []            # (task, remaining)
+        for t in range(n):
+            rate = self.base_rate * (
+                1.0 + self.diurnal_amp * np.sin(2 * np.pi * t / 24.0)
+            )
+            cur = shares.copy()
+            if rng.random() < self.burst_prob:
+                active.append([int(rng.integers(self.m_tasks)),
+                               self.burst_len])
+            for b in active:
+                cur[b[0]] *= self.burst_mult
+                b[1] -= 1
+            active = [b for b in active if b[1] > 0]
+            cur /= cur.sum()
+            w[t] = rng.poisson(rate * cur)
+        return w
+
+
+def task_workloads(m: int, n_intervals: int, seed: int = 0, **kw) -> np.ndarray:
+    return BurstyZipfStream(m_tasks=m, seed=seed, **kw).intervals(n_intervals)
+
+
+def task_state_sizes(w: np.ndarray, window: int = 6,
+                     bytes_per_item: float = 48.0) -> np.ndarray:
+    """Operator-state size per task per interval: counters within a sliding
+    window over the stream (paper's word-count / frequent-pattern states).
+    Sub-linear in volume (distinct keys saturate): size ∝ volume^0.8."""
+    n, m = w.shape
+    s = np.zeros_like(w)
+    for t in range(n):
+        lo = max(0, t - window + 1)
+        vol = w[lo : t + 1].sum(axis=0)
+        s[t] = bytes_per_item * np.power(vol, 0.8)
+    return s
+
+
+def node_count_trace(w: np.ndarray, n_min: int = 8, n_max: int = 16
+                     ) -> np.ndarray:
+    """Paper §6: allocate nodes proportional to per-interval volume,
+    normalized into [n_min, n_max]."""
+    vol = w.sum(axis=1)
+    lo, hi = vol.min(), vol.max()
+    if hi <= lo:
+        return np.full(len(vol), n_min, dtype=np.int64)
+    frac = (vol - lo) / (hi - lo)
+    return np.round(n_min + frac * (n_max - n_min)).astype(np.int64)

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+kernels/<name>.py — pl.pallas_call + BlockSpec (TPU target)
+ops.py            — jit'd wrappers (interpret=True on CPU; ref fallback)
+ref.py            — pure-jnp oracles
+
+Kernels: flash_attention (train/prefill), decode_attention (long-KV decode),
+rglru_scan (recurrentgemma), mamba_scan (falcon-mamba), interval_gain (the
+paper's PMC pairwise-cost hot loop).
+"""
+from .ops import (
+    decode_attention, flash_attention, mamba_scan, pairwise_gain, rglru_scan,
+)
+
+__all__ = ["decode_attention", "flash_attention", "mamba_scan",
+           "pairwise_gain", "rglru_scan"]

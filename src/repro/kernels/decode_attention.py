@@ -1,0 +1,102 @@
+"""Single-token decode attention Pallas kernel (flash-decode style).
+
+One new token per sequence attends a long KV cache.  Grid (B·Hkv, ns):
+the KV sequence is blocked; each step folds one KV block into the online
+softmax held in VMEM scratch for the G grouped q heads.  Invalid cache
+slots (ring buffers, unwritten tail, out-of-window) carry position -1 in
+``kv_pos`` and are masked — identical semantics to
+models.layers.decode_attention (the oracle).
+
+VMEM per step: k,v blocks (s_blk×hd×2B ≈ 128 KB at 512×128) + acc [G, hd]
+— tiny; the schedule is HBM-bandwidth-bound by design (decode roofline).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, pos_ref, qpos_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, ns: int, scale: float):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [G, hd]
+    k = k_ref[0, 0].astype(jnp.float32)                  # [s_blk, hd]
+    v = v_ref[0, 0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [G, s_blk]
+    kvp = pos_ref[0]                                     # [s_blk]
+    valid = jnp.logical_and(kvp >= 0, kvp <= qpos_ref[0])
+    s = jnp.where(valid[None, :], s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+    q_pos: jax.Array, kv_pos: jax.Array, *,
+    s_block: int = 512, interpret: bool = False,
+) -> jax.Array:
+    """q [B,H,hd]; caches [B,Hkv,S,hd]; q_pos [B]; kv_pos [B,S] (-1 invalid).
+
+    Returns o [B,H,hd].
+    """
+    B, H, hd = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    s_blk = min(s_block, S)
+    assert S % s_blk == 0
+    ns = S // s_blk
+    qg = q.reshape(B, Hkv, G, hd)
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(_kernel, ns=ns, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hkv, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda bh, si: (bh // Hkv, bh % Hkv, 0, 0)),
+            pl.BlockSpec((1, 1, s_blk, hd),
+                         lambda bh, si: (bh // Hkv, bh % Hkv, si, 0)),
+            pl.BlockSpec((1, 1, s_blk, hd),
+                         lambda bh, si: (bh // Hkv, bh % Hkv, si, 0)),
+            pl.BlockSpec((1, s_blk), lambda bh, si: (bh // Hkv, si)),
+            pl.BlockSpec((1,), lambda bh, si: (bh // Hkv,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda bh, si: (bh // Hkv, bh % Hkv, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k_cache, v_cache, kv_pos, q_pos)
+    return out.reshape(B, H, hd)

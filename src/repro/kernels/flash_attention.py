@@ -1,0 +1,127 @@
+"""Blocked flash attention Pallas kernel (TPU target).
+
+Schedule: grid (B·H, nq, nk) — online-softmax accumulation in VMEM scratch;
+the causal/window band is enforced by SKIPPING out-of-band kv blocks with
+``pl.when`` (on TPU a skipped grid step costs grid overhead, not FLOPs —
+the honest-causal schedule the pure-jnp path approximates with folding).
+
+GQA without materializing repeated KV: the K/V BlockSpec index maps collapse
+the q-head grid index onto its kv head (h // group).
+
+VMEM working set per grid step (default blocks, hd=128, f32 scratch):
+    q (512×128×2B) + k,v (512×128×2B each) + acc (512×128×4B) + m,l
+    ≈ 0.75 MB — comfortably inside the ~16 MB v5e VMEM budget with
+    double-buffered pipelining.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int, q_blk: int,
+            kv_blk: int, nk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    q_start = qi * q_blk
+    k_start = ki * kv_blk
+
+    # band check (static per grid step shape; dynamic predicate)
+    in_band = jnp.bool_(True)
+    if causal:
+        in_band = jnp.logical_and(in_band, k_start <= q_start + q_blk - 1)
+    if window:
+        in_band = jnp.logical_and(
+            in_band, k_start + kv_blk - 1 > q_start - window)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(in_band)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # [q_blk, hd]
+        k = k_ref[0, 0].astype(jnp.float32)               # [kv_blk, hd]
+        v = v_ref[0, 0]                                   # [kv_blk, hd]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # [q_blk, kv_blk]
+        qpos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (q_blk, kv_blk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (q_blk, kv_blk), 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, qpos >= kpos)
+        if window:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v,
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: int = 0,
+    q_block: int = 512, kv_block: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """q [B,H,Sq,hd]; k,v [B,Hkv,Skv,hd] -> o [B,H,Sq,hd]."""
+    B, H, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    q_blk = min(q_block, Sq)
+    kv_blk = min(kv_block, Skv)
+    assert Sq % q_blk == 0 and Skv % kv_blk == 0
+    nq, nk = Sq // q_blk, Skv // kv_blk
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        q_blk=q_blk, kv_blk=kv_blk, nk=nk)
+    grid = (B * H, nq, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q_blk, hd),
+                         lambda bh, qi, ki: (bh // H, bh % H, qi, 0)),
+            pl.BlockSpec((1, 1, kv_blk, hd),
+                         lambda bh, qi, ki: (bh // H, (bh % H) // G, ki, 0)),
+            pl.BlockSpec((1, 1, kv_blk, hd),
+                         lambda bh, qi, ki: (bh // H, (bh % H) // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_blk, hd),
+                               lambda bh, qi, ki: (bh // H, bh % H, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_blk, hd), jnp.float32),   # acc
+            pltpu.VMEM((q_blk,), jnp.float32),      # running max
+            pltpu.VMEM((q_blk,), jnp.float32),      # running sum
+        ],
+        interpret=interpret,
+    )(q, k, v)

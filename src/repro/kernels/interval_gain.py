@@ -1,0 +1,92 @@
+"""Batched non-crossing interval matching gain — the PAPER's compute
+hot-spot as a Pallas kernel.
+
+PMC (paper Fig. 16) needs the pairwise migration cost between every pair of
+balanced partitions: cost(P,P') = total_state − maxgain(P,P'), where
+maxgain is the non-crossing matching optimum, an LCS-style DP.  The paper
+runs this on a Spark cluster for "hundreds of minutes" (Fig. 6); here each
+(tile_a × tile_b) block of partition pairs runs the DP entirely in VMEM,
+vectorized across the pair tile on the VPU.
+
+Inputs are prefix-sum values at interval boundaries (a_lo/a_hi [Qa, Ka]):
+the overlap measure of intervals (i, j) is
+    max(0, min(a_hi[i], b_hi[j]) − max(a_lo[i], b_lo[j]))
+computed on the fly — no [Ka×Kb] overlap tensor ever hits HBM.
+
+DP state: g [ta, tb, Kb+1] f32 in VMEM, in-place row sweep with the
+carried-diagonal trick (old g[j-1] is the fori carry).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(alo_ref, ahi_ref, blo_ref, bhi_ref, out_ref, g_ref, *,
+            Ka: int, Kb: int):
+    ta = alo_ref.shape[0]
+    tb = blo_ref.shape[0]
+    g_ref[...] = jnp.zeros_like(g_ref)
+
+    def row(i, _):
+        a_lo = alo_ref[:, i][:, None]                    # [ta, 1]
+        a_hi = ahi_ref[:, i][:, None]
+
+        def col(j, diag_old):
+            b_lo = blo_ref[:, j][None, :]                # [1, tb]
+            b_hi = bhi_ref[:, j][None, :]
+            ov = jnp.maximum(
+                jnp.minimum(a_hi, b_hi) - jnp.maximum(a_lo, b_lo), 0.0)
+            up = g_ref[:, :, j + 1]                      # prev row, same col
+            left = g_ref[:, :, j]                        # new row, col-1
+            new = jnp.maximum(jnp.maximum(up, left), diag_old + ov)
+            g_ref[:, :, j + 1] = new
+            return up                                    # old g[j] = next diag
+
+        jax.lax.fori_loop(0, Kb, col, g_ref[:, :, 0])
+        return 0
+
+    jax.lax.fori_loop(0, Ka, row, 0)
+    out_ref[...] = g_ref[:, :, Kb].astype(out_ref.dtype)
+
+
+def interval_gain_pallas(a_lo: jax.Array, a_hi: jax.Array,
+                         b_lo: jax.Array, b_hi: jax.Array, *,
+                         tile_a: int = 8, tile_b: int = 128,
+                         interpret: bool = False) -> jax.Array:
+    """a_lo/a_hi [Qa, Ka], b_lo/b_hi [Qb, Kb] (f32 prefix values) ->
+    gain [Qa, Qb]."""
+    Qa, Ka = a_lo.shape
+    Qb, Kb = b_lo.shape
+    ta = min(tile_a, Qa)
+    tb = min(tile_b, Qb)
+    # pad Q dims to tile multiples
+    pa = (-Qa) % ta
+    pb = (-Qb) % tb
+    if pa:
+        pad = jnp.zeros((pa, Ka), a_lo.dtype)
+        a_lo, a_hi = jnp.concatenate([a_lo, pad]), jnp.concatenate([a_hi, pad])
+    if pb:
+        pad = jnp.zeros((pb, Kb), b_lo.dtype)
+        b_lo, b_hi = jnp.concatenate([b_lo, pad]), jnp.concatenate([b_hi, pad])
+    na, nb = a_lo.shape[0] // ta, b_lo.shape[0] // tb
+    kernel = functools.partial(_kernel, Ka=Ka, Kb=Kb)
+    out = pl.pallas_call(
+        kernel,
+        grid=(na, nb),
+        in_specs=[
+            pl.BlockSpec((ta, Ka), lambda i, j: (i, 0)),
+            pl.BlockSpec((ta, Ka), lambda i, j: (i, 0)),
+            pl.BlockSpec((tb, Kb), lambda i, j: (j, 0)),
+            pl.BlockSpec((tb, Kb), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((ta, tb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((na * ta, nb * tb), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((ta, tb, Kb + 1), jnp.float32)],
+        interpret=interpret,
+    )(a_lo, a_hi, b_lo, b_hi)
+    return out[:Qa, :Qb]

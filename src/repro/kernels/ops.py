@@ -1,0 +1,91 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On a TPU backend the kernels compile natively; everywhere else (this CPU
+container) they execute via ``interpret=True`` — same kernel body, Python
+semantics — so correctness is validated on CPU while the BlockSpec/VMEM
+schedule targets TPU.  ``prefer_pallas=False`` (or non-TPU + interpret-off)
+falls back to the pure-jnp oracle — the production model code calls these
+entry points, so flipping one flag moves the hot loops onto the kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref as _ref
+from .decode_attention import decode_attention_pallas
+from .flash_attention import flash_attention_pallas
+from .interval_gain import interval_gain_pallas
+from .mamba_scan import mamba_scan_pallas
+from .rglru_scan import rglru_scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_block=512,
+                    kv_block=512, use_pallas=None, interpret=None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if not use:
+        return _ref.flash_attention_ref(q, k, v, causal=causal,
+                                        window=window)
+    itp = (not _on_tpu()) if interpret is None else interpret
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  q_block=q_block, kv_block=kv_block,
+                                  interpret=itp)
+
+
+def decode_attention(q, k_cache, v_cache, q_pos, kv_pos, *, s_block=512,
+                     use_pallas=None, interpret=None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if not use:
+        return _ref.decode_attention_ref(q, k_cache, v_cache, q_pos, kv_pos)
+    itp = (not _on_tpu()) if interpret is None else interpret
+    return decode_attention_pallas(q, k_cache, v_cache, q_pos, kv_pos,
+                                   s_block=s_block, interpret=itp)
+
+
+def rglru_scan(a, b, h0, *, s_block=256, d_block=512, use_pallas=None,
+               interpret=None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if not use:
+        return _ref.rglru_scan_ref(a, b, h0)
+    itp = (not _on_tpu()) if interpret is None else interpret
+    return rglru_scan_pallas(a, b, h0, s_block=s_block, d_block=d_block,
+                             interpret=itp)
+
+
+def mamba_scan(a, b, c, h0, *, s_block=128, d_block=512, use_pallas=None,
+               interpret=None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if not use:
+        return _ref.mamba_scan_ref(a, b, c, h0)
+    itp = (not _on_tpu()) if interpret is None else interpret
+    return mamba_scan_pallas(a, b, c, h0, s_block=s_block, d_block=d_block,
+                             interpret=itp)
+
+
+def pairwise_gain(bounds_a: np.ndarray, bounds_b: np.ndarray,
+                  Ss: np.ndarray, *, use_pallas=None, interpret=None,
+                  tile_a=8, tile_b=128) -> np.ndarray:
+    """Drop-in accelerated replacement for
+    core.mtm.pairwise_gain_matrix(a_bounds, b_bounds, Ss) — the PMC hot
+    loop.  Converts boundary indices to prefix values and runs the batched
+    DP kernel."""
+    Ss = jnp.asarray(Ss, jnp.float32)
+    a = jnp.asarray(bounds_a)
+    b = jnp.asarray(bounds_b)
+    a_lo, a_hi = Ss[a[:, :-1]], Ss[a[:, 1:]]
+    b_lo, b_hi = Ss[b[:, :-1]], Ss[b[:, 1:]]
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if not use:
+        out = _ref.interval_gain_ref(a_lo, a_hi, b_lo, b_hi)
+    else:
+        itp = (not _on_tpu()) if interpret is None else interpret
+        out = interval_gain_pallas(a_lo, a_hi, b_lo, b_hi, tile_a=tile_a,
+                                   tile_b=tile_b, interpret=itp)
+    return np.asarray(out, dtype=np.float64)

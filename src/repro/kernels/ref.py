@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (single source of truth shared
+with the model layers where one exists)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import attention_reference, decode_attention
+from repro.models.recurrence import linear_scan
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q [B,H,Sq,hd]; k,v [B,Hkv,Skv,hd] — same layout as the kernel."""
+    o = attention_reference(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, window=window)
+    return o.transpose(0, 2, 1, 3)
+
+
+def decode_attention_ref(q, k_cache, v_cache, q_pos, kv_pos):
+    """q [B,H,hd]; caches [B,Hkv,S,hd] — kernel layout; oracle reuses the
+    model-layer decode attention ([B,S,Hkv,hd] layout)."""
+    o = decode_attention(q[:, None].transpose(0, 1, 2, 3),
+                         k_cache.transpose(0, 2, 1, 3),
+                         v_cache.transpose(0, 2, 1, 3), q_pos, kv_pos)
+    return o[:, 0]
+
+
+def rglru_scan_ref(a, b, h0):
+    h, _ = linear_scan(a, b, h0)
+    return h
+
+
+def mamba_scan_ref(a, b, c, h0):
+    """Materializing reference: h [B,S,D,N] then y = Σ_n c·h."""
+    h, h_last = linear_scan(a, b, h0)
+    y = jnp.einsum("bsdn,bsn->bsd", h.astype(jnp.float32),
+                   c.astype(jnp.float32)).astype(a.dtype)
+    return y, h_last
+
+
+def interval_gain_ref(a_lo, a_hi, b_lo, b_hi):
+    """Non-crossing matching DP, vectorized over all partition pairs."""
+    Qa, Ka = a_lo.shape
+    Qb, Kb = b_lo.shape
+    ov = jnp.maximum(
+        jnp.minimum(a_hi[:, None, :, None], b_hi[None, :, None, :])
+        - jnp.maximum(a_lo[:, None, :, None], b_lo[None, :, None, :]),
+        0.0)                                             # [Qa,Qb,Ka,Kb]
+    g = jnp.zeros((Qa, Qb, Kb + 1), jnp.float32)
+    for i in range(Ka):
+        def col(j, carry):
+            g_cur, diag_old = carry
+            new = jnp.maximum(
+                jnp.maximum(g_cur[:, :, j + 1], g_cur[:, :, j]),
+                diag_old + ov[:, :, i, j])
+            old = g_cur[:, :, j + 1]
+            return g_cur.at[:, :, j + 1].set(new), old
+        (g, _) = jax.lax.fori_loop(
+            0, Kb, col, (g, g[:, :, 0]))
+    return g[:, :, Kb]

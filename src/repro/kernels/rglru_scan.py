@@ -1,0 +1,63 @@
+"""RG-LRU linear-recurrence Pallas kernel.
+
+h_t = a_t ⊙ h_{t-1} + b_t over [B, S, D], elementwise in D.
+
+Grid (B, nd, ns) with ns innermost: the carry h lives in VMEM scratch and
+persists across sequence chunks (TPU grid steps execute in order); within a
+chunk the recurrence runs as a sequential fori over rows — each step is a
+[d_blk]-wide VPU op, so the kernel is bandwidth-bound reading a,b and
+writing h exactly once (the pure-jnp associative scan reads/writes the
+chunk O(log S) times — this kernel is the memory-roofline fix, see
+EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, h0_ref, h_ref, carry_ref, *, s_blk: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        carry_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        a_t = a_ref[0, t].astype(jnp.float32)
+        b_t = b_ref[0, t].astype(jnp.float32)
+        h = a_t * h + b_t
+        h_ref[0, t] = h.astype(h_ref.dtype)
+        return h
+
+    carry_ref[...] = jax.lax.fori_loop(0, s_blk, step, carry_ref[...])
+
+
+def rglru_scan_pallas(a: jax.Array, b: jax.Array, h0: jax.Array, *,
+                      s_block: int = 256, d_block: int = 512,
+                      interpret: bool = False):
+    """a, b [B,S,D]; h0 [B,D] -> h [B,S,D] (h[:, -1] is the final state)."""
+    B, S, D = a.shape
+    s_blk = min(s_block, S)
+    d_blk = min(d_block, D)
+    assert S % s_blk == 0 and D % d_blk == 0
+    ns, nd = S // s_blk, D // d_blk
+    kernel = functools.partial(_kernel, s_blk=s_blk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nd, ns),
+        in_specs=[
+            pl.BlockSpec((1, s_blk, d_blk), lambda bi, di, si: (bi, si, di)),
+            pl.BlockSpec((1, s_blk, d_blk), lambda bi, di, si: (bi, si, di)),
+            pl.BlockSpec((1, d_blk), lambda bi, di, si: (bi, di)),
+        ],
+        out_specs=pl.BlockSpec((1, s_blk, d_blk),
+                               lambda bi, di, si: (bi, si, di)),
+        out_shape=jax.ShapeDtypeStruct((B, S, D), a.dtype),
+        scratch_shapes=[pltpu.VMEM((d_blk,), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)

@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Do not move them.
+
+"""Multi-pod dry run (deliverable e).
+
+For every (architecture × input-shape) cell, lower + compile the real
+train/prefill/serve step against the production meshes:
+
+    single-pod : (16, 16)    axes ("data", "model")        = 256 chips
+    multi-pod  : (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+
+and record ``memory_analysis()`` (proves it fits), ``cost_analysis()``, and
+the loop-aware HLO roofline terms (repro.roofline).  Failures here —
+sharding mismatches, OOM at compile, unsupported collectives — are bugs.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh pod
+    python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (
+    ARCH_IDS, SHAPES, decode_cache_len, get_config, get_optimized,
+    input_specs, shape_applicable,
+)
+from repro.launch.mesh import data_size, make_production_mesh, model_size
+from repro.launch.shardings import (
+    batch_specs, cache_specs, opt_state_specs, param_specs, to_named,
+)
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models import init_cache, init_params
+from repro.optim import OptConfig, init_opt_state
+from repro.roofline.hlo import analyze
+from repro.roofline.terms import roofline_terms
+
+
+def _eval_shape(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, schedule: str = "masked",
+               variant: str = "base", microbatches: int = 1):
+    """Returns (jitted_fn, arg_structs) ready to .lower(*arg_structs)."""
+    cfg = get_optimized(arch) if variant == "opt" else get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise SkipCell(why)
+    key = jax.random.PRNGKey(0)
+    params_s = _eval_shape(functools.partial(init_params, cfg), key)
+    pspecs = param_specs(cfg, mesh, params_s)
+    pshard = to_named(pspecs, mesh)
+
+    if shape.kind == "train":
+        opt_cfg = OptConfig()
+        opt_s = _eval_shape(init_opt_state, params_s)
+        ospecs = opt_state_specs(pspecs, params_s, mesh)
+        oshard = to_named(ospecs, mesh)
+        binput = input_specs(cfg, shape)
+        bshard = to_named(batch_specs(cfg, mesh, binput), mesh)
+        step = make_train_step(cfg, opt_cfg, schedule=schedule,
+                               microbatches=microbatches,
+                               accum_dtype=jnp.bfloat16
+                               if microbatches > 1 else jnp.float32)
+        jf = jax.jit(step, in_shardings=(pshard, oshard, bshard),
+                     out_shardings=(pshard, oshard, None),
+                     donate_argnums=(0, 1))
+        return jf, (params_s, opt_s, binput), cfg, shape
+
+    if shape.kind == "prefill":
+        cache_len = decode_cache_len(cfg, shape)
+        cache_s = _eval_shape(
+            functools.partial(init_cache, cfg, shape.global_batch, cache_len))
+        cshard = to_named(cache_specs(cfg, mesh, cache_s), mesh)
+        binput = input_specs(cfg, shape)
+        bshard = to_named(batch_specs(cfg, mesh, binput), mesh)
+        step = make_prefill_step(cfg, schedule=schedule)
+        jf = jax.jit(step, in_shardings=(pshard, bshard, cshard),
+                     out_shardings=(None, cshard), donate_argnums=(2,))
+        return jf, (params_s, binput, cache_s), cfg, shape
+
+    # decode
+    cache_len = decode_cache_len(cfg, shape)
+    seq_shard = shape.name == "long_500k"
+    cache_s = _eval_shape(
+        functools.partial(init_cache, cfg, shape.global_batch, cache_len))
+    cshard = to_named(cache_specs(cfg, mesh, cache_s, seq_shard=seq_shard),
+                      mesh)
+    binput = input_specs(cfg, shape, aligned_decode=(variant == "opt"))
+    bshard = to_named(batch_specs(cfg, mesh, binput), mesh)
+    step = make_serve_step(cfg)
+    jf = jax.jit(step, in_shardings=(pshard, cshard, bshard["tokens"],
+                                     bshard["pos"]),
+                 out_shardings=(None, cshard), donate_argnums=(1,))
+    return jf, (params_s, cache_s, binput["tokens"], binput["pos"]), cfg, shape
+
+
+class SkipCell(Exception):
+    pass
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
+             schedule: str = "masked", tag: str = "",
+             variant: str = "base", microbatches: int = 1) -> dict:
+    multi = mesh_kind == "multipod"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_dev = mesh.size
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "devices": n_dev, "schedule": schedule, "variant": variant,
+           "status": "ok"}
+    t0 = time.time()
+    try:
+        jf, args, cfg, shape = build_cell(arch, shape_name, mesh,
+                                          schedule=schedule,
+                                          variant=variant,
+                                          microbatches=microbatches)
+        with mesh, jax.sharding.set_mesh(mesh):
+            lowered = jf.lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        mem = compiled.memory_analysis()
+        for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            rec[k] = getattr(mem, k, None)
+        ca = compiled.cost_analysis() or {}
+        rec["xla_flops_per_device"] = float(ca.get("flops", 0.0))
+        rec["xla_bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+        hlo = compiled.as_text()
+        costs = analyze(hlo, total_devices=n_dev)
+        rec["dot_flops_per_device"] = costs.dot_flops
+        rec["collective_bytes_per_device"] = costs.collective_bytes
+        rec["hbm_bytes_per_device"] = costs.hbm_bytes
+        rec["collective_breakdown"] = costs.collective_breakdown
+        rec["collective_counts"] = costs.collective_counts
+        rec["while_trips"] = costs.while_trips[:64]
+        rec.update(roofline_terms(cfg, SHAPES[shape_name], costs, n_dev))
+        rec["lower_s"] = round(t1 - t0, 2)
+        rec["compile_s"] = round(t2 - t1, 2)
+    except SkipCell as e:
+        rec["status"] = "skipped"
+        rec["why"] = str(e)
+    except Exception as e:  # noqa: BLE001 — record the failure, don't mask it
+        rec["status"] = "failed"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    out_dir.mkdir(parents=True, exist_ok=True)
+    sfx = f"_{tag}" if tag else ""
+    path = out_dir / f"{arch}_{shape_name}_{mesh_kind}{sfx}.json"
+    path.write_text(json.dumps(rec, indent=2, default=str))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--schedule", default="masked",
+                    choices=["masked", "folded"])
+    ap.add_argument("--variant", default="base", choices=["base", "opt"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    out = Path(args.out)
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+    failures = 0
+    for a, s in cells:
+        for mk in meshes:
+            rec = run_cell(a, s, mk, out, schedule=args.schedule,
+                           tag=args.tag, variant=args.variant,
+                           microbatches=args.microbatches)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                extra = (f" compute={rec['compute_s']:.4g}s"
+                         f" mem={rec['memory_s']:.4g}s"
+                         f" coll={rec['collective_s']:.4g}s"
+                         f" bottleneck={rec['bottleneck']}"
+                         f" compile={rec['compile_s']}s")
+            elif status == "failed":
+                failures += 1
+                extra = " " + rec["error"][:200]
+            print(f"[{status:7s}] {a} × {s} × {mk}{extra}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — smoke tests must keep seeing 1 CPU device;
+only dryrun.py sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+before first jax init.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: 16×16 = 256 chips (data, model).
+    Multi-pod: 2×16×16 = 512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """Arbitrary mesh (tests / examples use (1,1) or (1,2) CPU meshes)."""
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The elastic batch axes: ("pod","data") on multi-pod, ("data",) else."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def data_size(mesh: Mesh) -> int:
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def model_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)

@@ -1,0 +1,113 @@
+"""GPipe-style pipeline parallelism (opt-in; DESIGN.md §5).
+
+Formulation: stage-stacked parameters (leading [n_stages] axis) and a
+skewed clock.  Each tick vmaps the stage function across all stages on a
+rotating activation buffer; the rotation (`jnp.roll` along the stage dim)
+is what GSPMD lowers to a `collective-permute` when the stage dimension is
+sharded over a mesh axis — so the same function is both the single-host
+reference (stage dim unsharded, validated numerically in
+tests/test_pipeline.py) and the distributed schedule (stage dim sharded:
+each device computes its stage's slice and the roll becomes neighbor
+ICI traffic).
+
+Bubble fraction is the usual (S−1)/(T+S−1); utilization improves with more
+microbatches exactly as in GPipe.  The transformer hook
+(``pipeline_depth_fn``) splits the scanned layer stack into S equal stage
+slices.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def pipeline_apply(stage_params: Any, x_micro: jax.Array,
+                   stage_fn: Callable[[Any, jax.Array], jax.Array]
+                   ) -> jax.Array:
+    """Run microbatches through a pipeline of stages.
+
+    stage_params: pytree with leading [S] stage axis on every leaf.
+    x_micro:      [n_micro, mb, ...] microbatched input activations.
+    stage_fn:     (per-stage params, [mb, ...]) -> [mb, ...].
+
+    Returns [n_micro, mb, ...] outputs (stage S−1's results, in microbatch
+    order).  Total ticks = n_micro + S − 1 (the GPipe bubble).
+    """
+    S = jax.tree_util.tree_leaves(stage_params)[0].shape[0]
+    n_micro = x_micro.shape[0]
+    T = n_micro + S - 1
+    buf = jnp.zeros((S,) + x_micro.shape[1:], x_micro.dtype)
+
+    def tick(buf, t):
+        # inject microbatch t into stage 0's slot (zeros after the last one)
+        idx = jnp.minimum(t, n_micro - 1)
+        inject = lax.dynamic_index_in_dim(x_micro, idx, 0, keepdims=False)
+        inject = jnp.where(t < n_micro, inject, jnp.zeros_like(inject))
+        buf = buf.at[0].set(inject)
+        y = jax.vmap(stage_fn)(stage_params, buf)     # all stages compute
+        out = y[S - 1]                                # completed microbatch
+        # rotate: stage s+1's next input is stage s's output.  With the
+        # stage dim sharded this roll IS the inter-stage collective-permute.
+        buf = jnp.roll(y, 1, axis=0)
+        return buf, out
+
+    _, outs = lax.scan(tick, buf, jnp.arange(T))
+    return outs[S - 1:]                                # drop warmup bubble
+
+
+def stack_stages(params_layers: Any, n_stages: int) -> Any:
+    """Reshape layer-stacked params [L, ...] into [S, L/S, ...]."""
+    def one(x):
+        L = x.shape[0]
+        assert L % n_stages == 0, f"layers {L} must divide stages {n_stages}"
+        return x.reshape((n_stages, L // n_stages) + x.shape[1:])
+
+    return jax.tree_util.tree_map(one, params_layers)
+
+
+def pipeline_depth_fn(cfg, layer_fn: Callable) -> Callable:
+    """Stage function applying L/S scanned layers (one stage's slice)."""
+    def stage_fn(stage_layer_params, x):
+        def body(carry, p):
+            return layer_fn(carry, p), None
+        y, _ = lax.scan(body, x, stage_layer_params)
+        return y
+
+    return stage_fn
+
+
+def pipeline_transformer_blocks(params_blocks: Tuple, x: jax.Array,
+                                cfg, positions, n_stages: int,
+                                n_micro: int, schedule: str = "masked"
+                                ) -> jax.Array:
+    """Pipeline the decoder block stack of a uniform-pattern model.
+
+    Only single-kind patterns pipeline cleanly (dense/MoE/Mamba stacks);
+    hybrid patterns keep the non-pipelined scan.  x [B, S, d] is split on
+    batch into n_micro microbatches.
+    """
+    assert len(cfg.block_pattern) == 1, "pipeline needs a uniform pattern"
+    from repro.models.transformer import _layer_full
+
+    kind = cfg.block_pattern[0]
+    B = x.shape[0]
+    assert B % n_micro == 0
+    mb = B // n_micro
+    x_micro = x.reshape((n_micro, mb) + x.shape[1:])
+    pos_micro = positions.reshape((n_micro, mb) + positions.shape[1:])
+    staged = stack_stages(params_blocks[0], n_stages)
+    # positions are identical for every batch-major microbatch slice, so
+    # the stage closure uses the first microbatch's positions
+    pos0 = pos_micro[0]
+
+    def stage_fn(stage_params, y):
+        def body(carry, p):
+            return _layer_full(carry, p, kind, cfg, pos0, schedule), None
+        y, _ = lax.scan(body, y, stage_params)
+        return y
+
+    out = pipeline_apply(staged, x_micro, stage_fn)
+    return out.reshape((B,) + x.shape[1:])

@@ -1,0 +1,299 @@
+"""Sharding rules: parameter, optimizer-state, batch and cache PartitionSpecs
+for every architecture family on the production meshes.
+
+TP plan (model axis):
+* q heads column-parallel; K/V projections REPLICATED when Hkv < model-axis
+  (the vLLM/Megatron GQA rule — avoids padded/uneven head shards); wo
+  row-parallel (psum).
+* MLP: w_gate/w_up column-, w_down row-parallel.
+* MoE: experts over "model" when E % model == 0 (phi3.5: EP=16); otherwise
+  TP *inside* experts over d_ff (mixtral 8e on 16-way: EP would pad 2×).
+* RG-LRU: the whole recurrent path is sharded over lru blocks ("model"),
+  zero collectives inside the recurrence; in/out projections col/row-parallel.
+* Mamba: d_inner over "model" (elementwise scan path stays local), x_proj
+  row-parallel into the small (dt,B,C) head, out_proj row-parallel.
+* Embedding/unembedding over vocab.
+
+DP/ZeRO-1 (data axes): gradients mean-reduced over ("pod","data"); optimizer
+master/m/v additionally sharded over the data axes on the largest
+still-unsharded divisible dimension.
+
+Batch rule: batch dim over ("pod","data") — except long_500k (B=1), where
+the KV/window cache shards its *sequence* dim over "data" (SP) instead.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig, ShapeConfig
+from .mesh import data_axes, data_size, model_size
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def _attn_specs(cfg, mesh) -> Dict[str, P]:
+    msz = model_size(mesh)
+    kv_shardable = cfg.padded_kv_heads and cfg.padded_kv_heads % msz == 0
+    q_shardable = cfg.padded_heads and cfg.padded_heads % msz == 0
+    qs = "model" if q_shardable else None
+    kvs = "model" if kv_shardable else None
+    sp = {
+        "wq": P(None, qs, None),
+        "wk": P(None, kvs, None),
+        "wv": P(None, kvs, None),
+        "wo": P(qs, None, None),
+        "bq": P(qs, None), "bk": P(kvs, None), "bv": P(kvs, None),
+        "q_norm": P(None), "k_norm": P(None),
+    }
+    return sp
+
+
+def _mlp_specs(cfg, mesh) -> Dict[str, P]:
+    msz = model_size(mesh)
+    ff = "model" if cfg.d_ff and cfg.d_ff % msz == 0 else None
+    return {"w_gate": P(None, ff), "w_up": P(None, ff),
+            "w_gu": P(None, None, ff), "w_down": P(ff, None)}
+
+
+def _moe_specs(cfg, mesh) -> Dict[str, P]:
+    msz = model_size(mesh)
+    if cfg.n_experts % msz == 0:
+        e = ("model", None, None)
+    else:
+        # TP inside experts instead of padded EP
+        assert cfg.d_ff % msz == 0
+        e = None
+    if e:
+        return {"router": P(None, None), "w_gate": P(*e), "w_up": P(*e),
+                "w_gu": P("model", None, None, None), "w_down": P(*e)}
+    return {"router": P(None, None),
+            "w_gate": P(None, None, "model"),
+            "w_up": P(None, None, "model"),
+            "w_gu": P(None, None, None, "model"),
+            "w_down": P(None, "model", None)}
+
+
+def _rglru_specs(cfg, mesh) -> Dict[str, P]:
+    msz = model_size(mesh)
+    ok = cfg.d_lru % msz == 0 and max(cfg.n_heads, 1) % msz == 0
+    m = "model" if ok else None
+    return {
+        "w1": P(None, m), "w2": P(None, m), "conv": P(None, m),
+        "wa": P(m, None, None), "wx": P(m, None, None),
+        "lam": P(m), "w_out": P(m, None),
+    }
+
+
+def _mamba_specs(cfg, mesh) -> Dict[str, P]:
+    msz = model_size(mesh)
+    ok = cfg.d_inner % msz == 0
+    m = "model" if ok else None
+    return {
+        "in_proj": P(None, m), "conv": P(None, m),
+        "x_proj": P(m, None), "dt_proj": P(None, m), "dt_bias": P(m),
+        "A_log": P(m, None), "D": P(m), "out_proj": P(m, None),
+    }
+
+
+def _norm_spec(leaf) -> P:
+    return P(*([None] * np.ndim(leaf)))
+
+
+def _layer_specs(cfg, mesh, p_layer) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for k, v in p_layer.items():
+        if k == "attn" or k == "cross_attn":
+            sp = _attn_specs(cfg, mesh)
+            out[k] = {kk: sp[kk] for kk in v}
+        elif k == "mlp":
+            sp = _mlp_specs(cfg, mesh)
+            out[k] = {kk: sp[kk] for kk in v}
+        elif k == "moe":
+            sp = _moe_specs(cfg, mesh)
+            out[k] = {kk: sp[kk] for kk in v}
+        elif k == "rglru":
+            sp = _rglru_specs(cfg, mesh)
+            out[k] = {kk: sp[kk] for kk in v}
+        elif k == "mamba":
+            sp = _mamba_specs(cfg, mesh)
+            out[k] = {kk: sp[kk] for kk in v}
+        else:  # norms (possibly dicts for ln)
+            out[k] = jax.tree_util.tree_map(_norm_spec, v)
+    return out
+
+
+def _prepend(spec_tree, axis=None):
+    """Add a leading (stacked-layer) dim to every spec."""
+    return jax.tree_util.tree_map(
+        lambda s: P(axis, *s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params_shape) -> Any:
+    """PartitionSpec pytree matching init_params' structure.
+
+    ``params_shape`` is the eval_shape pytree (structure source)."""
+    msz = model_size(mesh)
+    vs = "model" if cfg.vocab_size % msz == 0 else None
+    specs: Dict[str, Any] = {}
+    for k, v in params_shape.items():
+        if k in ("embed", "unembed"):
+            specs[k] = P(vs, None)
+        elif k == "final_norm":
+            specs[k] = jax.tree_util.tree_map(_norm_spec, v)
+        elif k == "blocks":
+            specs[k] = tuple(
+                _prepend(_layer_specs(cfg, mesh, _strip_stack(group)))
+                for group in v
+            )
+        elif k == "tail":
+            specs[k] = tuple(_layer_specs(cfg, mesh, g) for g in v)
+        elif k == "encoder":
+            specs[k] = {
+                "blocks": _prepend(
+                    _layer_specs(cfg, mesh, _strip_stack(v["blocks"]))),
+                "final_norm": jax.tree_util.tree_map(
+                    _norm_spec, v["final_norm"]),
+            }
+        else:
+            raise KeyError(k)
+    return specs
+
+
+def _strip_stack(group):
+    """View a stacked layer-params pytree as a single layer (drop lead dim)."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), group)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state specs: ZeRO-1 over the data axes
+# ---------------------------------------------------------------------------
+
+def zero1_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Extend a param spec with the data axes on the largest unsharded,
+    divisible dim (classic optimizer-state sharding)."""
+    daxes = data_axes(mesh)
+    dsz = data_size(mesh)
+    if not daxes or dsz == 1:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    # pick the largest unsharded dim divisible by the data size
+    best, best_dim = -1, -1
+    for i, (e, s) in enumerate(zip(entries, shape)):
+        if e is None and s % dsz == 0 and s > best:
+            best, best_dim = s, i
+    if best_dim < 0:
+        return spec
+    entries[best_dim] = daxes if len(daxes) > 1 else daxes[0]
+    return P(*entries)
+
+
+def opt_state_specs(param_specs_tree, params_shape, mesh: Mesh) -> Any:
+    """Specs for {"step","master","m","v"} given param specs/shapes."""
+    def z(spec, shp):
+        return zero1_spec(spec, shp.shape, mesh)
+
+    zt = jax.tree_util.tree_map(
+        z, param_specs_tree, params_shape,
+        is_leaf=lambda s: isinstance(s, P))
+    return {"step": P(), "master": zt, "m": zt, "v": zt}
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch_shape) -> Any:
+    daxes = data_axes(mesh)
+    dp = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+
+    def spec_for(k, v):
+        if np.ndim(v) == 0:
+            return P()
+        if v.shape[0] % max(data_size(mesh), 1) != 0:
+            return P(*([None] * np.ndim(v)))       # unshardable tiny batch
+        return P(dp, *([None] * (np.ndim(v) - 1)))
+
+    return {k: spec_for(k, v) for k, v in batch_shape.items()}
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, cache_shape,
+                seq_shard: bool = False) -> Any:
+    """Decode-cache specs.  Batch over data axes; when ``seq_shard`` (the
+    long_500k B=1 cell) KV/window sequence dim goes over "data" instead and
+    recurrent channel dims go over "model"."""
+    daxes = data_axes(mesh)
+    dp = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    msz = model_size(mesh)
+    dsz = data_size(mesh)
+
+    def leaf_spec(path, v):
+        names = [getattr(x, "key", getattr(x, "name", str(x))) for x in path]
+        nd = np.ndim(v)
+        stacked = "blocks" in names or "cross_k" in names or (
+            "cross_v" in names)
+        off = 1 if stacked else 0            # leading [reps]/[L] dim
+        shape = v.shape
+        batch_ok = shape[off] % max(dsz, 1) == 0
+
+        def base(*rest):
+            pre = (None,) * off
+            return P(*(pre + rest))
+
+        if "k" in names or "v" in names or "cross_k" in names or (
+                "cross_v" in names):
+            # [.., B, S, Hkv, hd]
+            kvs = "model" if (cfg.padded_kv_heads
+                              and cfg.padded_kv_heads % msz == 0) else None
+            # when heads can't take the model axis, the cache SEQUENCE dim
+            # must (flash-decode style): otherwise a 32k cache is 34 GB per
+            # device and blows the HBM budget (memory_analysis catches it)
+            s_sh = None
+            if kvs is None and shape[off + 1] % msz == 0:
+                s_sh = "model"
+            if seq_shard and shape[off + 1] % max(dsz, 1) == 0:
+                dd = daxes if len(daxes) > 1 else daxes[0]
+                s_sh = (dd if s_sh is None else
+                        (tuple(daxes) + ("model",)
+                         if shape[off + 1] % (dsz * msz) == 0 else dd))
+                return base(None, s_sh, kvs, None)
+            return base(dp if batch_ok else None, s_sh, kvs, None)
+        if "pos" in names:
+            s_sh = None
+            if (not (cfg.padded_kv_heads
+                     and cfg.padded_kv_heads % msz == 0)
+                    and shape[off + 1] % msz == 0):
+                s_sh = "model"
+            if seq_shard and shape[off + 1] % max(dsz, 1) == 0:
+                dd = daxes if len(daxes) > 1 else daxes[0]
+                s_sh = (dd if s_sh is None else
+                        (tuple(daxes) + ("model",)
+                         if shape[off + 1] % (dsz * msz) == 0 else dd))
+                return base(None, s_sh)
+            return base(dp if batch_ok else None, s_sh)
+        if "h" in names:
+            # rglru [.., B, dl] / mamba [.., B, di, N]
+            ch = shape[off + 1]
+            ms = "model" if ch % msz == 0 else None
+            rest = (ms,) + (None,) * (nd - off - 2)
+            return base(dp if batch_ok else None, *rest)
+        if "conv" in names:
+            ch = shape[off + 2]
+            ms = "model" if ch % msz == 0 else None
+            return base(dp if batch_ok else None, None, ms)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shape)
+
+
+def to_named(tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,145 @@
+"""Train / prefill / serve step factories.
+
+``make_train_step`` returns a pure function (params, opt_state, batch) ->
+(params, opt_state, metrics); the data-parallel gradient mean is produced by
+GSPMD from the loss mean (baseline), or — with ``grad_compression=True`` —
+by an explicit int8 error-feedback all-gather inside a shard_map that is
+manual over the data axes only (the model axis stays GSPMD-auto).
+
+``make_serve_step`` returns (params, cache, tokens, pos) -> (logits, cache):
+one decode step.  ``make_prefill_step`` fills the cache from a prompt batch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import decode_step, loss_fn, prefill
+from repro.models.config import ModelConfig
+from repro.optim import (
+    OptConfig, adamw_update, compressed_psum_mean, init_error_state,
+)
+from .mesh import data_axes
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig, *,
+                    schedule: str = "masked", microbatches: int = 1,
+                    accum_dtype=jnp.float32) -> Callable:
+    """Train step with optional microbatched gradient accumulation.
+
+    ``microbatches > 1`` scans over batch slices, bounding live activation
+    memory to one microbatch (the dry run showed mixtral train_4k needs
+    this to fit v5e HBM); gradients accumulate in ``accum_dtype`` (f32
+    default; bf16 halves the accumulator at a small precision cost).
+    """
+    def one_loss(params, batch):
+        return loss_fn(params, cfg, batch, schedule=schedule, remat=True)
+
+    if microbatches == 1:
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(one_loss)(params, batch)
+            new_params, new_opt, metrics = adamw_update(
+                grads, opt_state, params, opt_cfg)
+            metrics["loss"] = loss
+            return new_params, new_opt, metrics
+
+        return train_step
+
+    def train_step(params, opt_state, batch):
+        B = batch["tokens"].shape[0]
+        assert B % microbatches == 0
+        mbs = jax.tree_util.tree_map(
+            lambda x: x.reshape((microbatches, B // microbatches)
+                                + x.shape[1:]), batch)
+
+        def acc(carry, mb):
+            g_acc, l_acc = carry
+            loss, grads = jax.value_and_grad(one_loss)(params, mb)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(a.dtype), g_acc, grads)
+            return (g_acc, l_acc + loss), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, accum_dtype), params)
+        (g, l), _ = jax.lax.scan(acc, (zeros, jnp.zeros((), jnp.float32)),
+                                 mbs)
+        g = jax.tree_util.tree_map(lambda x: x / microbatches, g)
+        new_params, new_opt, metrics = adamw_update(
+            g, opt_state, params, opt_cfg)
+        metrics["loss"] = l / microbatches
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_compressed_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                               mesh: Mesh, param_spec_tree, batch_spec_tree,
+                               *, schedule: str = "masked") -> Callable:
+    """Train step whose DP gradient reduction is int8 + error feedback.
+
+    shard_map is manual over the data axes only; parameters stay replicated
+    w.r.t. data (spec P() on data axes) and the model axis remains auto.
+    The optimizer state is data-replicated in this mode (the ZeRO-1 state
+    sharding and wire compression are alternative memory/bandwidth
+    trade-offs; see EXPERIMENTS.md §Perf).
+    """
+    daxes = data_axes(mesh)
+
+    def body(params, opt_state, err, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, schedule=schedule, remat=True)
+        )(params)
+        mean_grads, new_err = compressed_psum_mean(grads, err, daxes)
+        loss = jax.lax.pmean(loss, daxes)
+        new_params, new_opt, metrics = adamw_update(
+            mean_grads, opt_state, params, opt_cfg)
+        metrics["loss"] = loss
+        return new_params, new_opt, new_err, metrics
+
+    # manual over data axes only: batch splits on axis 0, everything else is
+    # data-replicated; the "model" axis is untouched (auto).
+    def dspec(tree, batched: bool):
+        def one(v):
+            nd = v.ndim if hasattr(v, "ndim") else 0
+            if batched and nd:
+                return P(daxes if len(daxes) > 1 else daxes[0],
+                         *([None] * (nd - 1)))
+            return P(*([None] * nd))
+        return jax.tree_util.tree_map(one, tree)
+
+    def train_step(params, opt_state, err, batch):
+        in_specs = (dspec(params, False), dspec(opt_state, False),
+                    dspec(err, False), dspec(batch, True))
+        out_specs = (dspec(params, False), dspec(opt_state, False),
+                     dspec(err, False),
+                     {"loss": P(), "grad_norm": P(), "lr": P()})
+        f = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, axis_names=set(daxes),
+                          check_vma=False)
+        return f(params, opt_state, err, batch)
+
+    # partial-manual shard_map requires a surrounding jit (eager tracing
+    # rejects auto axes in out_specs)
+    return jax.jit(train_step)
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = decode_step(params, cfg, tokens, pos, cache)
+        return logits, new_cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, schedule: str = "masked"
+                      ) -> Callable:
+    def prefill_step(params, batch, cache):
+        logits, new_cache = prefill(params, cfg, batch, cache,
+                                    schedule=schedule)
+        return logits, new_cache
+
+    return prefill_step

@@ -1,0 +1,18 @@
+"""Model substrate: configs + pure-JAX implementations of all assigned
+architecture families."""
+from .config import ModelConfig, ShapeConfig, SHAPES, shape_applicable
+from .transformer import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_count,
+    prefill,
+)
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "shape_applicable",
+    "decode_step", "forward", "init_cache", "init_params", "loss_fn",
+    "param_count", "prefill",
+]

@@ -1,0 +1,252 @@
+"""Model configuration for all assigned architectures.
+
+One frozen dataclass describes every family (dense / moe / hybrid / ssm /
+audio enc-dec / vlm); family-specific fields default to "off".  Configs for
+the ten assigned architectures live in ``repro.configs`` and are plain
+instances of this class (full) plus a ``smoke()`` reduction of the same
+family for CPU tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: Optional[int] = None   # default: d_model // n_heads
+    # --- attention ---------------------------------------------------------
+    window: int = 0                  # sliding/local attention window (0=full)
+    qk_norm: bool = False            # qwen3-style RMSNorm on q/k heads
+    qkv_bias: bool = False           # qwen2.5-style bias on q/k/v projections
+    nonparametric_ln: bool = False   # olmo-style LN without scale/bias
+    rope_theta: float = 10_000.0
+    # --- MoE ----------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25    # dispatch capacity = cf * top_k * T / E
+    # --- hybrid (recurrentgemma): layer pattern -----------------------------
+    # pattern of layer kinds repeated over depth; "attn" uses `window`.
+    block_pattern: Tuple[str, ...] = ("attn",)   # e.g. ("rglru","rglru","attn")
+    lru_width: Optional[int] = None  # RG-LRU state width (default d_model)
+    conv_width: int = 4              # temporal conv width (rglru & mamba)
+    # --- SSM (mamba-1) -------------------------------------------------------
+    ssm_state: int = 0
+    expand: int = 2                  # d_inner = expand * d_model
+    dt_rank: Optional[int] = None    # default ceil(d_model / 16)
+    # --- encoder-decoder (whisper) -------------------------------------------
+    encoder_layers: int = 0          # >0 => enc-dec; encoder is bidirectional
+    encoder_seq: int = 1500          # post-conv audio frames (stub frontend)
+    # --- vlm ------------------------------------------------------------------
+    vision_tokens: int = 0           # prefix of precomputed patch embeddings
+    # --- activation / misc ----------------------------------------------------
+    act: str = "silu"                # silu (swiglu) | gelu (plain 2-layer MLP)
+    norm: str = "rms"                # rms | ln (whisper) | ln_np (olmo)
+    # --- perf variants (EXPERIMENTS.md §Perf) ---------------------------------
+    head_pad_multiple: int = 0       # pad q heads to a TP-divisible count
+    expand_kv: bool = False          # per-q-head KV gather (no GQA reshape)
+    bf16_reduce: bool = False        # bf16 outputs on row-parallel matmuls
+    seq_parallel: bool = False       # shard residual-stream S over "model":
+                                     # AG(bf16)+RS replace the f32 psum pair
+    manual_moe: bool = False         # shard_map expert FFN: explicit bf16
+                                     # psum on the combine (GSPMD pins f32)
+    fused_gu: bool = False           # fuse gate+up projections: ONE bwd dx
+                                     # all-reduce instead of two
+    remat_save_reduced: bool = False  # remat policy: save the psum-bearing
+                                      # layer outputs so the recompute pass
+                                      # repeats no fwd all-reduces
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"          # activation/compute dtype
+    param_dtype: str = "bfloat16"    # stored parameter dtype
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else (
+            self.d_model // self.n_heads if self.n_heads else 0
+        )
+
+    @property
+    def padded_heads(self) -> int:
+        """Stored q-head count: n_heads rounded up to head_pad_multiple
+        (padded heads are zero-initialized; standard TP head padding).
+        For GQA the padding is spread per KV group so grouped attention
+        pairing stays exact; padded count must divide by n_kv_heads."""
+        if not self.head_pad_multiple or not self.n_heads:
+            return self.n_heads
+        mult = self.head_pad_multiple
+        hp = -(-self.n_heads // mult) * mult
+        if self.n_kv_heads and self.n_kv_heads < self.n_heads:
+            # per-group padding: group size must be integral
+            while hp % self.n_kv_heads:
+                hp += mult
+        return hp
+
+    @property
+    def padded_kv_heads(self) -> int:
+        """MHA pads KV alongside q (zero heads attend zero queries); GQA
+        keeps real KV heads (padding lives in the q groups)."""
+        if (self.head_pad_multiple and self.n_kv_heads
+                and self.n_kv_heads == self.n_heads):
+            return self.padded_heads
+        return self.n_kv_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def dtr(self) -> int:
+        return self.dt_rank if self.dt_rank is not None else -(-self.d_model // 16)
+
+    @property
+    def d_lru(self) -> int:
+        return self.lru_width if self.lru_width is not None else self.d_model
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if decode state is bounded (window/recurrent) — required for
+        the long_500k shape."""
+        if self.family == "ssm":
+            return True
+        if self.window > 0:
+            return True
+        return False
+
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Resolved per-layer kind list of length n_layers (pattern tiled,
+        truncated)."""
+        pat = self.block_pattern
+        reps = -(-self.n_layers // len(pat))
+        return tuple((pat * reps)[: self.n_layers])
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embedding + per-layer weights), used for
+        MODEL_FLOPS = 6·N·D roofline terms."""
+        d, ff, hd = self.d_model, self.d_ff, self.hd
+        H, Hkv = self.n_heads, self.n_kv_heads
+        emb = self.vocab_size * d
+        total = emb if self.tie_embeddings else 2 * emb
+        kinds = self.layer_kinds
+
+        def attn_params() -> int:
+            p = d * H * hd + 2 * d * Hkv * hd + H * hd * d
+            if self.qkv_bias:
+                p += (H + 2 * Hkv) * hd
+            if self.qk_norm:
+                p += 2 * hd
+            return p
+
+        def mlp_params() -> int:
+            if self.act == "silu":
+                return 3 * d * ff
+            return 2 * d * ff
+
+        def moe_params() -> int:
+            return self.n_experts * 3 * d * ff + d * self.n_experts
+
+        def rglru_params() -> int:
+            dl = self.d_lru
+            nb = max(self.n_heads, 1)
+            # in/out proj + block-diagonal gates + conv + lambda
+            return (2 * d * dl + dl * d + 2 * dl * dl // nb
+                    + self.conv_width * dl + dl)
+
+        def mamba_params() -> int:
+            di, st, dtr = self.d_inner, self.ssm_state, self.dtr
+            return (
+                d * 2 * di                   # in_proj (x, z)
+                + self.conv_width * di       # conv1d
+                + di * (dtr + 2 * st)        # x_proj -> dt, B, C
+                + dtr * di                   # dt_proj
+                + di * st                    # A_log
+                + 2 * di                     # D, dt bias
+                + di * d                     # out_proj
+            )
+
+        per_kind = {
+            "attn": lambda: attn_params() + (
+                moe_params() if self.n_experts else mlp_params()
+            ),
+            "rglru": lambda: rglru_params() + mlp_params(),
+            "mamba": lambda: mamba_params(),
+        }
+        for k in kinds:
+            total += per_kind[k]() + 2 * d * (0 if self.nonparametric_ln else 1)
+        if self.is_encoder_decoder:
+            # encoder self-attn+mlp plus decoder cross-attention
+            total += self.encoder_params()
+            total += self.n_layers * attn_params()          # cross-attn
+        return int(total)
+
+    def encoder_params(self) -> int:
+        """Params of the (bidirectional) encoder stack only."""
+        if not self.is_encoder_decoder:
+            return 0
+        d, ff, hd = self.d_model, self.d_ff, self.hd
+        H, Hkv = self.n_heads, self.n_kv_heads
+        attn = d * H * hd + 2 * d * Hkv * hd + H * hd * d
+        mlp = (3 if self.act == "silu" else 2) * d * ff
+        return int(self.encoder_layers * (attn + mlp))
+
+    def active_params(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        if not self.n_experts:
+            return self.n_params()
+        d, ff = self.d_model, self.d_ff
+        inactive = (self.n_experts - self.top_k) * 3 * d * ff
+        return int(self.n_params() - len(self.layer_kinds) * 0 - sum(
+            inactive for k in self.layer_kinds if k == "attn"
+        ))
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell from the assignment."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch, shape) cell runs, and why not if skipped (the skip
+    list is documented in DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: 500k dense KV decode is skipped"
+    return True, ""

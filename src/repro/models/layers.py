@@ -1,0 +1,574 @@
+"""Pure-JAX building blocks shared by every assigned architecture.
+
+Everything here is functional (params are explicit pytree leaves) and
+GSPMD-friendly: no host callbacks, static shapes, `lax.scan` for long loops
+so the HLO stays small enough to compile 64-layer models against 512
+placeholder devices.
+
+Attention comes in three schedules (all pure jnp; the Pallas kernels in
+``repro.kernels`` implement the same schedules for TPU):
+
+* ``masked``  — scan over KV blocks with a causal mask.  Simple, but causal
+                masking wastes ~2× FLOPs at long sequence.  Baseline.
+* ``folded``  — causal-folded schedule: q-blocks i and nq-1-i are processed
+                together so every scan step does exactly one block matmul and
+                total block-pairs = nq(nq+1)/2, i.e. *honest* causal FLOPs.
+                Used by the perf-optimized configs (EXPERIMENTS.md §Perf).
+* ``banded``  — sliding/local window: each q-block attends a fixed-size KV
+                band gathered with a dynamic slice ⇒ O(S·window) compute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: Optional[jax.Array], eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(F32)
+    y = x * lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    if scale is not None:
+        y = y * (1.0 + scale.astype(F32))
+    return y.astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: Optional[jax.Array],
+               bias: Optional[jax.Array], eps: float = 1e-5):
+    """LayerNorm; pass scale=bias=None for OLMo's non-parametric LN."""
+    dt = x.dtype
+    x = x.astype(F32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(F32)
+    if bias is not None:
+        y = y + bias.astype(F32)
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_sincos(positions: jax.Array, head_dim: int, theta: float):
+    """positions [...,] -> (sin, cos) of shape [..., head_dim/2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=F32) / half))
+    ang = positions.astype(F32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array):
+    """x [..., S, n_heads, head_dim]; sin/cos broadcastable to [..., S, 1, hd/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[..., None, :]
+    cos = cos[..., None, :]
+    dt = x.dtype
+    x1, x2 = x1.astype(F32), x2.astype(F32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Attention projections
+# ---------------------------------------------------------------------------
+
+def qkv_project(x, p, cfg, positions):
+    """x [B,S,d] -> q [B,S,H,hd], k,v [B,S,Hkv,hd] (roped q,k)."""
+    pet = reduce_pet(cfg)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"],
+                   preferred_element_type=pet).astype(F32)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"],
+                   preferred_element_type=pet).astype(F32)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"],
+                   preferred_element_type=pet).astype(F32)
+    if "bq" in p:
+        q = q + p["bq"].astype(F32)
+        k = k + p["bk"].astype(F32)
+        v = v + p["bv"].astype(F32)
+    if "q_norm" in p:  # qwen3-style per-head RMSNorm on q/k
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    sin, cos = rope_sincos(positions, q.shape[-1], cfg.rope_theta)
+    q = apply_rope(q.astype(x.dtype), sin, cos)
+    k = apply_rope(k.astype(x.dtype), sin, cos)
+    return q, k, v.astype(x.dtype)
+
+
+def reduce_pet(cfg):
+    """Output dtype of ROW-PARALLEL matmuls (the all-reduced ones): bf16
+    when cfg.bf16_reduce — halves the TP activation all-reduce bytes
+    (EXPERIMENTS.md §Perf); accumulation stays f32 inside the MXU."""
+    return jnp.bfloat16 if getattr(cfg, "bf16_reduce", False) else F32
+
+
+def out_project(o, p, cfg=None):
+    pet = reduce_pet(cfg) if cfg is not None else F32
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"], preferred_element_type=pet
+                      ).astype(o.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocked attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _online_combine(m, s, acc, scores, v_blk):
+    """One online-softmax step.  scores [B,Hkv,G,qb,kb] f32,
+    v_blk [B,Hkv,kb,hd]."""
+    m_new = jnp.maximum(m, scores.max(axis=-1))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(scores - m_new[..., None])
+    s_new = s * alpha + p.sum(axis=-1)
+    acc_new = acc * alpha[..., None] + jnp.einsum(
+        "bhgqk,bhkd->bhgqd", p.astype(v_blk.dtype), v_blk,
+        preferred_element_type=F32,
+    )
+    return m_new, s_new, acc_new
+
+
+def _split_heads(q, k, v):
+    """[B,S,H,hd]/[B,S,Hkv,hd] -> grouped [B,Hkv,G,S,hd], [B,Hkv,S,hd]."""
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd).transpose(0, 2, 3, 1, 4)
+    kg = k.transpose(0, 2, 1, 3)
+    vg = v.transpose(0, 2, 1, 3)
+    return qg, kg, vg
+
+
+def _merge_heads(o):
+    """[B,Hkv,G,S,hd] -> [B,S,H,hd]."""
+    B, Hkv, G, S, hd = o.shape
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, S, Hkv * G, hd)
+
+
+NEG_INF = -1e30
+
+
+def blocked_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True,
+    window: int = 0,
+    q_block: int = 512,
+    kv_block: int = 512,
+    schedule: str = "masked",          # masked | folded | auto
+) -> jax.Array:
+    """FlashAttention-style streaming attention in pure jnp.
+
+    q [B,Sq,H,hd]; k,v [B,Skv,Hkv,hd]; GQA via head grouping.  Sq == Skv is
+    assumed for causal (self-attention); cross-attention passes causal=False.
+    """
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+    if Sq % q_block or Skv % kv_block:
+        # fall back to one-shot reference for ragged tiny shapes (smoke tests)
+        return attention_reference(q, k, v, causal=causal, window=window)
+    nq, nk = Sq // q_block, Skv // kv_block
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    qg, kg, vg = _split_heads(q, k, v)
+    qb = qg.reshape(B, qg.shape[1], qg.shape[2], nq, q_block, hd)
+    kb = kg.reshape(B, kg.shape[1], nk, kv_block, hd)
+    vb = vg.reshape(B, vg.shape[1], nk, kv_block, hd)
+
+    if window and causal and Sq == Skv:
+        out = _banded(qb, kb, vb, window, q_block, kv_block, scale)
+    elif causal and Sq == Skv and schedule == "folded" and nq % 2 == 0:
+        out = _folded_causal(qb, kb, vb, q_block, kv_block, scale)
+    else:
+        out = _masked(qb, kb, vb, causal and Sq == Skv, q_block, kv_block,
+                      scale)
+    return _merge_heads(out.reshape(B, out.shape[1], out.shape[2], Sq, hd))
+
+
+def _masked(qb, kb, vb, causal, q_blk, kv_blk, scale):
+    """Scan over q blocks; inner scan over all kv blocks with mask."""
+    B, Hkv, G, nq, qblk, hd = qb.shape
+    nk = kb.shape[2]
+
+    def per_q(qi, q_tile):
+        q_tile = q_tile * scale
+
+        def step(carry, inp):
+            m, s, acc = carry
+            ji, k_tile, v_tile = inp
+            scores = jnp.einsum("bhgqd,bhkd->bhgqk", q_tile, k_tile,
+                                preferred_element_type=F32)
+            if causal:
+                qpos = qi * qblk + jnp.arange(qblk)
+                kpos = ji * kv_blk + jnp.arange(kv_blk)
+                mask = qpos[:, None] >= kpos[None, :]
+                scores = jnp.where(mask, scores, NEG_INF)
+            return _online_combine(m, s, acc, scores, v_tile), None
+
+        init = (
+            jnp.full((B, Hkv, G, qblk), NEG_INF, F32),
+            jnp.zeros((B, Hkv, G, qblk), F32),
+            jnp.zeros((B, Hkv, G, qblk, hd), F32),
+        )
+        (m, s, acc), _ = lax.scan(
+            step, init,
+            (jnp.arange(nk), kb.transpose(2, 0, 1, 3, 4),
+             vb.transpose(2, 0, 1, 3, 4)),
+        )
+        return acc / jnp.maximum(s, 1e-30)[..., None]
+
+    out = lax.map(lambda t: per_q(t[0], t[1]),
+                  (jnp.arange(nq), qb.transpose(3, 0, 1, 2, 4, 5)))
+    return out.transpose(1, 2, 3, 0, 4, 5).astype(kb.dtype)
+
+
+def _folded_causal(qb, kb, vb, q_blk, kv_blk, scale):
+    """Causal-folded schedule: q blocks (i, nq-1-i) share one KV sweep of
+    nq+1 steps, each step exactly one block matmul ⇒ total pairs
+    nq(nq+1)/2 — no masked-out waste."""
+    B, Hkv, G, nq, qblk, hd = qb.shape
+    nk = kb.shape[2]
+    assert nq == nk and nq % 2 == 0
+    half = nq // 2
+
+    def per_pair(i):
+        lo, hi = i, nq - 1 - i
+        q_lo = qb[:, :, :, lo] * scale
+        q_hi = qb[:, :, :, hi] * scale
+
+        def step(carry, j):
+            (ml, sl, al), (mh, sh, ah) = carry
+            is_lo = j <= lo
+            kv_idx = jnp.where(is_lo, j, j - lo - 1)
+            k_tile = lax.dynamic_index_in_dim(kb, kv_idx, 2, keepdims=False)
+            v_tile = lax.dynamic_index_in_dim(vb, kv_idx, 2, keepdims=False)
+            q_tile = jnp.where(is_lo, q_lo, q_hi)
+            qi = jnp.where(is_lo, lo, hi)
+            scores = jnp.einsum("bhgqd,bhkd->bhgqk", q_tile, k_tile,
+                                preferred_element_type=F32)
+            # only the diagonal block needs the triangular mask
+            qpos = qi * qblk + jnp.arange(qblk)
+            kpos = kv_idx * kv_blk + jnp.arange(kv_blk)
+            mask = qpos[:, None] >= kpos[None, :]
+            diag = kv_idx == qi
+            scores = jnp.where(jnp.logical_or(~diag, mask), scores, NEG_INF)
+            m, s, acc = jnp.where(is_lo, ml, mh), jnp.where(is_lo, sl, sh), (
+                jnp.where(is_lo, al, ah))
+            m2, s2, a2 = _online_combine(m, s, acc, scores, v_tile)
+            new_lo = (jnp.where(is_lo, m2, ml), jnp.where(is_lo, s2, sl),
+                      jnp.where(is_lo, a2, al))
+            new_hi = (jnp.where(is_lo, mh, m2), jnp.where(is_lo, sh, s2),
+                      jnp.where(is_lo, ah, a2))
+            return (new_lo, new_hi), None
+
+        zero = (
+            jnp.full((B, Hkv, G, qblk), NEG_INF, F32),
+            jnp.zeros((B, Hkv, G, qblk), F32),
+            jnp.zeros((B, Hkv, G, qblk, hd), F32),
+        )
+        ((ml, sl, al), (mh, sh, ah)), _ = lax.scan(
+            step, (zero, zero), jnp.arange(nq + 1))
+        o_lo = al / jnp.maximum(sl, 1e-30)[..., None]
+        o_hi = ah / jnp.maximum(sh, 1e-30)[..., None]
+        return o_lo, o_hi
+
+    o_lo, o_hi = lax.map(per_pair, jnp.arange(half))   # [half,B,Hkv,G,qblk,hd]
+    o_lo = o_lo.transpose(1, 2, 3, 0, 4, 5)
+    o_hi = o_hi.transpose(1, 2, 3, 0, 4, 5)[:, :, :, ::-1]
+    return jnp.concatenate([o_lo, o_hi], axis=3).astype(kb.dtype)
+
+
+def _banded(qb, kb, vb, window, q_blk, kv_blk, scale):
+    """Sliding-window causal attention: q block i attends KV rows
+    [i*qb - window, i*qb + qb) gathered via dynamic slice ⇒ O(S·window)."""
+    B, Hkv, G, nq, qblk, hd = qb.shape
+    nk = kb.shape[2]
+    Skv = nk * kv_blk
+    band = window + qblk                      # static band size in rows
+    band = -(-band // kv_blk) * kv_blk
+    band = min(band, Skv)
+    kf = kb.reshape(B, Hkv, Skv, hd)
+    vf = vb.reshape(B, Hkv, Skv, hd)
+
+    def per_q(i, q_tile):
+        q_tile = q_tile * scale
+        start = jnp.clip(i * qblk + qblk - band, 0, Skv - band)
+        k_band = lax.dynamic_slice_in_dim(kf, start, band, axis=2)
+        v_band = lax.dynamic_slice_in_dim(vf, start, band, axis=2)
+        scores = jnp.einsum("bhgqd,bhkd->bhgqk", q_tile, k_band,
+                            preferred_element_type=F32)
+        qpos = i * qblk + jnp.arange(qblk)
+        kpos = start + jnp.arange(band)
+        mask = (qpos[:, None] >= kpos[None, :]) & (
+            kpos[None, :] > qpos[:, None] - window)
+        scores = jnp.where(mask, scores, NEG_INF)
+        m = scores.max(axis=-1, keepdims=True)
+        p = jnp.exp(scores - m)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v_band.dtype), v_band,
+                       preferred_element_type=F32)
+        return o / jnp.maximum(p.sum(axis=-1), 1e-30)[..., None]
+
+    out = lax.map(lambda t: per_q(t[0], t[1]),
+                  (jnp.arange(nq), qb.transpose(3, 0, 1, 2, 4, 5)))
+    return out.transpose(1, 2, 3, 0, 4, 5).astype(kb.dtype)
+
+
+def attention_reference(q, k, v, *, causal=True, window=0,
+                        kv_positions=None, q_positions=None):
+    """One-shot reference attention (oracle for kernels + tiny shapes).
+
+    kv_positions/q_positions allow ring-buffer caches: masking is computed
+    from absolute positions instead of array index.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=F32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    qpos = (jnp.arange(Sq) if q_positions is None else q_positions)
+    kpos = (jnp.arange(Skv) if kv_positions is None else kv_positions)
+    qpos = jnp.asarray(qpos)
+    kpos = jnp.asarray(kpos)
+    if qpos.ndim == 1:
+        qpos = qpos[None, :]
+    if kpos.ndim == 1:
+        kpos = kpos[None, :]
+    mask = jnp.ones((qpos.shape[0], 1, 1, qpos.shape[1], kpos.shape[1]),
+                    bool)
+    if causal:
+        mask &= (qpos[:, None, None, :, None] >= kpos[:, None, None, None, :])
+    if window:
+        mask &= (kpos[:, None, None, None, :]
+                 > qpos[:, None, None, :, None] - window)
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                   preferred_element_type=F32)
+    return o.reshape(B, Sq, H, hd).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (one new token against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, q_pos, kv_positions):
+    """q [B,1,H,hd]; caches [B,S,Hkv,hd]; kv_positions [B,S] absolute
+    positions (-1 ⇒ invalid slot, e.g. unwritten ring-buffer entries)."""
+    B, _, H, hd = q.shape
+    Hkv = k_cache.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, hd)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                        preferred_element_type=F32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    valid = (kv_positions >= 0) & (kv_positions <= q_pos[:, None])
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=F32)
+    return o.reshape(B, 1, H, hd).astype(v_cache.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_swiglu(x, p, pet=F32):
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"], preferred_element_type=pet)
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"], preferred_element_type=pet)
+    h = (jax.nn.silu(g.astype(F32)) * u.astype(F32)).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"],
+                      preferred_element_type=pet).astype(x.dtype)
+
+
+def mlp_gelu(x, p, pet=F32):
+    h = jnp.einsum("bsd,df->bsf", x, p["w_up"], preferred_element_type=pet)
+    h = jax.nn.gelu(h.astype(F32), approximate=True).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"],
+                      preferred_element_type=pet).astype(x.dtype)
+
+
+def mlp_swiglu_fused(x, p, pet=F32):
+    # w_gu [d, 2, ff]: gate/up split along the UNSHARDED middle dim so the
+    # slice never crosses ff shards (a [d, 2ff] layout would)
+    gu = jnp.einsum("bsd,dtf->bstf", x, p["w_gu"], preferred_element_type=pet)
+    g, u = gu[..., 0, :], gu[..., 1, :]
+    h = (jax.nn.silu(g.astype(F32)) * u.astype(F32)).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"],
+                      preferred_element_type=pet).astype(x.dtype)
+
+
+def mlp(x, p, cfg):
+    pet = reduce_pet(cfg)
+    if "w_gu" in p:
+        return mlp_swiglu_fused(x, p, pet)
+    return mlp_swiglu(x, p, pet) if cfg.act == "silu" else \
+        mlp_gelu(x, p, pet)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (grouped capacity dispatch, GShard/Switch style)
+# ---------------------------------------------------------------------------
+
+def moe_apply(x, p, cfg, *, group_size: int = 1024,
+              min_capacity: int = 1):
+    """Top-k expert routing with per-group capacity.
+
+    x [B,S,d].  Tokens are flattened and split into groups of ``group_size``;
+    each group dispatches into every expert with capacity
+    C = ceil(cf·top_k·group/E).  Dispatch/combine are one-hot einsums, which
+    shard cleanly under GSPMD (tokens over data axes, experts over model).
+    Overflow tokens are dropped (standard capacity-based MoE; cf=1.25).
+    Decode passes ``min_capacity=group`` so single-token steps never drop.
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    g = min(group_size, T)
+    n_groups = T // g
+    assert n_groups * g == T, f"group_size {g} must divide tokens {T}"
+    cap = max(min_capacity, int(cfg.capacity_factor * K * g / E))
+
+    xt = x.reshape(n_groups, g, d)
+    logits = jnp.einsum("ngd,de->nge", xt, p["router"],
+                        preferred_element_type=F32)
+    topv, topi = lax.top_k(logits, K)                    # [n,g,K]
+    gates = jax.nn.softmax(topv, axis=-1)                # renormalized top-k
+
+    # dispatch/combine tensors hold 0/1 and gate weights: bf16 is lossless
+    # for the one-hots and halves their HBM footprint (under bf16_reduce)
+    ddt = reduce_pet(cfg)
+    # position of each (token, k) within its expert queue
+    onehot = jax.nn.one_hot(topi, E, dtype=F32)          # [n,g,K,E]
+    flat = onehot.reshape(n_groups, g * K, E)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(n_groups, g, K, E)
+    pos = jnp.einsum("ngke,ngke->ngk", pos, onehot).astype(jnp.int32)
+    keep = pos < cap
+    gates = gates * keep
+
+    # dispatch [n, g, E, cap] combine weights
+    slot_oh = jax.nn.one_hot(pos, cap, dtype=ddt)        # [n,g,K,cap]
+    dispatch = jnp.einsum("ngke,ngkc->ngec",
+                          (onehot * keep[..., None]).astype(ddt), slot_oh,
+                          preferred_element_type=ddt)
+    combine = jnp.einsum("ngk,ngke,ngkc->ngec", gates.astype(ddt),
+                         onehot.astype(ddt), slot_oh,
+                         preferred_element_type=ddt)
+
+    x_e = jnp.einsum("ngec,ngd->necd", dispatch, xt.astype(ddt),
+                     preferred_element_type=ddt)
+    x_e = x_e.transpose(1, 0, 2, 3).reshape(E, n_groups * cap, d).astype(
+        x.dtype)
+    # x_e [E, n*cap, d] — run every expert's FFN
+    pet = reduce_pet(cfg)
+    if "w_gu" in p:
+        gu = jnp.einsum("ecd,edtf->ectf", x_e, p["w_gu"],
+                        preferred_element_type=pet)
+        ge, ue = gu[..., 0, :], gu[..., 1, :]
+    else:
+        ge = jnp.einsum("ecd,edf->ecf", x_e, p["w_gate"],
+                        preferred_element_type=pet)
+        ue = jnp.einsum("ecd,edf->ecf", x_e, p["w_up"],
+                        preferred_element_type=pet)
+    he = (jax.nn.silu(ge.astype(F32)) * ue.astype(F32)).astype(x.dtype)
+    oe = jnp.einsum("ecf,efd->ecd", he, p["w_down"],
+                    preferred_element_type=pet)            # [E, n*cap, d]
+    oe = oe.reshape(E, n_groups, cap, d).transpose(1, 0, 2, 3)
+    # keep oe in its (possibly bf16) dtype INTO the combine so the TP psum
+    # on the w_down output is not widened back to f32 by a hoisted convert
+    out = jnp.einsum("ngec,necd->ngd", combine.astype(oe.dtype), oe,
+                     preferred_element_type=F32)
+    return out.reshape(B, S, d).astype(x.dtype), logits
+
+
+def moe_apply_manual(x, p, cfg, *, group_size: int = 1024,
+                     min_capacity: int = 1):
+    """moe_apply with the expert FFN under a MANUAL shard_map over "model".
+
+    GSPMD pins the TP activation all-reduce to the dot accumulation dtype
+    (f32) regardless of preferred_element_type (measured — EXPERIMENTS.md
+    §Perf); in manual mode the psum runs on whatever dtype we hand it, so
+    the combine reduction crosses the wire in bf16: 2× fewer bytes.  The
+    routing (top-k, capacity, dispatch/combine weights) stays in auto mode.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if not getattr(cfg, "manual_moe", False) or \
+            "model" not in tuple(getattr(mesh, "axis_names", ()) or ()):
+        return moe_apply(x, p, cfg, group_size=group_size,
+                         min_capacity=min_capacity)
+    from jax.sharding import PartitionSpec as P
+
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    g = min(group_size, T)
+    n_groups = T // g
+    assert n_groups * g == T
+    cap = max(min_capacity, int(cfg.capacity_factor * K * g / E))
+    xt = x.reshape(n_groups, g, d)
+    logits = jnp.einsum("ngd,de->nge", xt, p["router"],
+                        preferred_element_type=F32)
+    topv, topi = lax.top_k(logits, K)
+    gates = jax.nn.softmax(topv, axis=-1)
+    onehot = jax.nn.one_hot(topi, E, dtype=F32)
+    flat = onehot.reshape(n_groups, g * K, E)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(n_groups, g, K, E)
+    pos = jnp.einsum("ngke,ngke->ngk", pos, onehot).astype(jnp.int32)
+    keep = pos < cap
+    gates = gates * keep
+    slot_oh = jax.nn.one_hot(pos, cap, dtype=F32)
+    dispatch = jnp.einsum("ngke,ngkc->ngec", onehot * keep[..., None],
+                          slot_oh)
+    combine = jnp.einsum("ngk,ngke,ngkc->ngec", gates, onehot, slot_oh)
+    x_e = jnp.einsum("ngec,ngd->necd", dispatch, xt.astype(F32))
+    x_e = x_e.transpose(1, 0, 2, 3).reshape(E, n_groups * cap, d).astype(
+        x.dtype)
+
+    def expert_ffn(x_e_l, wg, wu, wd, comb):
+        # local ff shard; explicit bf16 psum on the combined output
+        ge = jnp.einsum("ecd,edf->ecf", x_e_l, wg,
+                        preferred_element_type=F32)
+        ue = jnp.einsum("ecd,edf->ecf", x_e_l, wu,
+                        preferred_element_type=F32)
+        he = (jax.nn.silu(ge) * ue).astype(x_e_l.dtype)
+        oe = jnp.einsum("ecf,efd->ecd", he, wd,
+                        preferred_element_type=F32)      # partial sums
+        oe = oe.reshape(E, n_groups, cap, d).transpose(1, 0, 2, 3)
+        out = jnp.einsum("ngec,necd->ngd", comb.astype(jnp.bfloat16),
+                         oe.astype(jnp.bfloat16),
+                         preferred_element_type=jnp.bfloat16)
+        return lax.psum(out, "model")                    # bf16 on the wire
+
+    f = jax.shard_map(
+        expert_ffn,
+        in_specs=(P(), P(None, None, "model"), P(None, None, "model"),
+                  P(None, "model", None), P()),
+        out_specs=P(),
+        axis_names={"model"},
+        check_vma=False,
+    )
+    out = f(x_e, p["w_gate"], p["w_up"], p["w_down"], combine)
+    return out.reshape(B, S, d).astype(x.dtype), logits
+
+
+def moe_aux_loss(logits: jax.Array, cfg) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss over router logits."""
+    probs = jax.nn.softmax(logits.astype(F32), axis=-1)    # [n,g,E]
+    E = cfg.n_experts
+    top1 = jnp.argmax(probs, axis=-1)
+    frac_tokens = jnp.mean(jax.nn.one_hot(top1, E, dtype=F32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    return E * jnp.sum(frac_tokens * frac_probs)

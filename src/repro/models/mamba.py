@@ -1,0 +1,90 @@
+"""Mamba-1 selective-SSM block (falcon-mamba-7b, arXiv:2410.05355).
+
+    x ──► in_proj ──► (x_in, z)
+    x_in ──► causal conv1d ──► SiLU ──► u
+    u ──► x_proj ──► (Δ̂, B, C);  Δ = softplus(dt_proj(Δ̂) + dt_bias)
+    h_t = exp(Δ_t ⊗ A) ⊙ h_{t-1} + (Δ_t ⊗ B_t) · u_t      (state N per channel)
+    y = (C_t · h_t) + D ⊙ u;   out = out_proj(y ⊙ SiLU(z))
+
+A = −exp(A_log) is the standard negative-real parameterization.  The scan is
+the chunked associative scan from ``recurrence.linear_scan`` over [B,S,di,N]
+gates (Pallas TPU version: kernels/mamba_scan.py).  falcon-mamba additionally
+RMS-norms B, C, Δ (we follow that; it stabilizes bf16).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+from .recurrence import causal_conv1d, linear_scan
+
+F32 = jnp.float32
+
+
+def init_mamba_params(key, cfg, dtype) -> dict:
+    d, di, N, dtr, cw = (cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dtr,
+                         cfg.conv_width)
+    ks = jax.random.split(key, 5)
+    sc = lambda fan: 1.0 / jnp.sqrt(jnp.float32(fan))
+    A_log = jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=F32)[None, :],
+                             (di, 1)))
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di)) * sc(d)).astype(dtype),
+        "conv": (jax.random.normal(ks[1], (cw, di)) * 0.1).astype(dtype),
+        "x_proj": (jax.random.normal(ks[2], (di, dtr + 2 * N)) * sc(di)
+                   ).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[3], (dtr, di)) * sc(dtr)).astype(dtype),
+        "dt_bias": jnp.zeros((di,), dtype),
+        "A_log": A_log.astype(F32),          # kept f32 (sensitive)
+        "D": jnp.ones((di,), F32),
+        "out_proj": (jax.random.normal(ks[4], (di, d)) * sc(di)).astype(dtype),
+    }
+
+
+def mamba_block(x: jax.Array, p: dict, cfg,
+                state: Optional[dict] = None,
+                chunk: int = 128) -> Tuple[jax.Array, dict]:
+    """x [B,S,d] -> (y [B,S,d], new_state {"h": [B,di,N], "conv": ...})."""
+    B, S, d = x.shape
+    di, N, dtr = cfg.d_inner, cfg.ssm_state, cfg.dtr
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"],
+                    preferred_element_type=F32).astype(x.dtype)
+    x_in, z = xz[..., :di], xz[..., di:]
+    conv_state = None if state is None else state["conv"]
+    u, new_conv = causal_conv1d(x_in, p["conv"], conv_state)
+    u = jax.nn.silu(u.astype(F32)).astype(x.dtype)
+
+    dbc = jnp.einsum("bsi,ie->bse", u, p["x_proj"],
+                     preferred_element_type=F32)
+    dt_in, Bc, Cc = (dbc[..., :dtr], dbc[..., dtr:dtr + N],
+                     dbc[..., dtr + N:])
+    # falcon-mamba RMS-norms the SSM inputs
+    dt_in = rms_norm(dt_in, None)
+    Bc = rms_norm(Bc, None)
+    Cc = rms_norm(Cc, None)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_in, p["dt_proj"],
+                   preferred_element_type=F32) + p["dt_bias"].astype(F32)
+    )                                                     # [B,S,di]
+    A = -jnp.exp(p["A_log"].astype(F32))                  # [di,N]
+    a = jnp.exp(dt[..., None] * A)                        # [B,S,di,N]
+    b = (dt[..., None] * Bc[:, :, None, :]) * u.astype(F32)[..., None]
+    h0 = (jnp.zeros((B, di, N), F32) if state is None
+          else state["h"].astype(F32))
+    h, h_last = linear_scan(a, b, h0, chunk=chunk)        # [B,S,di,N]
+    y = jnp.einsum("bsin,bsn->bsi", h, Cc) + p["D"].astype(F32) * u.astype(F32)
+    y = y * jax.nn.silu(z.astype(F32))
+    from .layers import reduce_pet
+    out = jnp.einsum("bsi,id->bsd", y.astype(x.dtype), p["out_proj"],
+                     preferred_element_type=reduce_pet(cfg)).astype(x.dtype)
+    return out, {"h": h_last, "conv": new_conv}
+
+
+def init_mamba_state(cfg, batch: int, dtype=jnp.float32) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), F32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), dtype),
+    }

@@ -1,0 +1,65 @@
+"""Linear-recurrence substrate shared by RG-LRU (recurrentgemma) and Mamba-1
+(falcon-mamba): a chunked, associative-scan evaluation of
+
+    h_t = a_t ⊙ h_{t-1} + b_t
+
+with elementwise decay ``a``.  The sequence is processed in chunks carried by
+``lax.scan`` (bounding live memory to one chunk) and each chunk runs a
+parallel ``lax.associative_scan`` — the same two-level schedule the Pallas
+kernels implement on TPU (kernels/rglru_scan.py, kernels/mamba_scan.py).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+F32 = jnp.float32
+
+
+def _combine(c1, c2):
+    a1, b1 = c1
+    a2, b2 = c2
+    return a1 * a2, a2 * b1 + b2
+
+
+def linear_scan(a: jax.Array, b: jax.Array, h0: jax.Array,
+                chunk: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """a, b: [B, S, ...] (elementwise); h0: [B, ...].
+
+    Returns (h [B,S,...], h_final [B,...]).
+    """
+    B, S = a.shape[0], a.shape[1]
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S  # ragged tiny shapes: single chunk
+    n = S // chunk
+    ac = a.reshape((B, n, chunk) + a.shape[2:]).swapaxes(0, 1)
+    bc = b.reshape((B, n, chunk) + b.shape[2:]).swapaxes(0, 1)
+
+    def step(h, inp):
+        a_i, b_i = inp                                  # [B, chunk, ...]
+        aa, bb = lax.associative_scan(_combine, (a_i, b_i), axis=1)
+        h_seq = aa * h[:, None] + bb                    # prefix-applied carry
+        return h_seq[:, -1], h_seq
+
+    h_last, h_all = lax.scan(step, h0, (ac, bc))
+    h_all = h_all.swapaxes(0, 1).reshape((B, S) + a.shape[2:])
+    return h_all, h_last
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, state: jax.Array = None):
+    """Depthwise causal conv.  x [B,S,D]; w [cw,D]; state [B,cw-1,D] carries
+    the last cw-1 inputs for decode.  Returns (y [B,S,D], new_state)."""
+    B, S, D = x.shape
+    cw = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, cw - 1, D), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)            # [B, S+cw-1, D]
+    y = jnp.zeros((B, S, D), F32)
+    for i in range(cw):
+        y = y + w[i].astype(F32) * xp[:, i : i + S].astype(F32)
+    new_state = xp[:, S:]
+    return y.astype(x.dtype), new_state

@@ -1,0 +1,106 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block structure (one "rglru" layer of the hybrid pattern):
+
+    x ──► W1 ──► GeLU ─────────────────────────┐
+    x ──► W2 ──► causal conv1d ──► RG-LRU ──► ⊙ ──► W_out
+
+RG-LRU recurrence (per channel):
+    r_t = σ(W_a u_t)          recurrence gate
+    i_t = σ(W_x u_t)          input gate
+    a_t = exp(-c · softplus(Λ) · r_t)            (c = 8)
+    h_t = a_t · h_{t-1} + sqrt(1 − a_t²) · (i_t ⊙ u_t)
+
+The recurrence is evaluated with the chunked associative scan in
+``recurrence.linear_scan`` (Pallas TPU version: kernels/rglru_scan.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .recurrence import causal_conv1d, linear_scan
+
+F32 = jnp.float32
+_C = 8.0
+
+
+def init_rglru_params(key, cfg, dtype) -> dict:
+    """Gates W_a, W_x are BLOCK-DIAGONAL with one block per head (Griffin
+    §2.4) — [nb, dh, dh].  Besides matching the paper, this keeps the whole
+    recurrent path elementwise-per-block so TP shards it with zero
+    collectives (blocks over the "model" axis)."""
+    d, dl, cw = cfg.d_model, cfg.d_lru, cfg.conv_width
+    nb = max(cfg.n_heads, 1)
+    dh = dl // nb
+    assert nb * dh == dl, "lru width must divide into head blocks"
+    ks = jax.random.split(key, 6)
+    sc = lambda *sh: 1.0 / jnp.sqrt(jnp.float32(sh[0]))
+    return {
+        "w1": (jax.random.normal(ks[0], (d, dl)) * sc(d)).astype(dtype),
+        "w2": (jax.random.normal(ks[1], (d, dl)) * sc(d)).astype(dtype),
+        "conv": (jax.random.normal(ks[2], (cw, dl)) * 0.1).astype(dtype),
+        "wa": (jax.random.normal(ks[3], (nb, dh, dh)) * sc(dh)).astype(dtype),
+        "wx": (jax.random.normal(ks[4], (nb, dh, dh)) * sc(dh)).astype(dtype),
+        # Λ init so that a ≈ 0.9..0.999 at r=0.5 (Griffin appendix)
+        "lam": jnp.linspace(0.9, 4.0, dl).astype(dtype),
+        "w_out": (jax.random.normal(ks[5], (dl, d)) * sc(dl)).astype(dtype),
+    }
+
+
+def rglru_gates(u: jax.Array, p: dict):
+    """u [B,S,dl] -> (a, b) of the linear recurrence, both [B,S,dl] f32.
+
+    The block-diagonal gate matmuls run in f32: they are tiny (dl²/nb) and
+    the CPU executor lacks a batched bf16×bf16→f32 dot kernel."""
+    B, S, dl = u.shape
+    nb, dh, _ = p["wa"].shape
+    ub = u.reshape(B, S, nb, dh).astype(F32)
+    r = jax.nn.sigmoid(jnp.einsum("bshd,hde->bshe", ub,
+                                  p["wa"].astype(F32),
+                                  preferred_element_type=F32)
+                       ).reshape(B, S, dl)
+    i = jax.nn.sigmoid(jnp.einsum("bshd,hde->bshe", ub,
+                                  p["wx"].astype(F32),
+                                  preferred_element_type=F32)
+                       ).reshape(B, S, dl)
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(F32)) * r
+    a = jnp.exp(log_a)
+    gated = i * u.astype(F32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    return a, b
+
+
+def rglru_block(x: jax.Array, p: dict, state: Optional[dict] = None,
+                chunk: int = 256) -> Tuple[jax.Array, dict]:
+    """x [B,S,d] -> (y [B,S,d], new_state).
+
+    ``state`` carries {"h": [B,dl], "conv": [B,cw-1,dl]} across decode steps
+    (None ⇒ zeros, training/prefill from scratch).
+    """
+    B, S, d = x.shape
+    dl = p["w1"].shape[1]
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w1"],
+                                  preferred_element_type=F32),
+                       approximate=True)
+    u = jnp.einsum("bsd,de->bse", x, p["w2"],
+                   preferred_element_type=F32).astype(x.dtype)
+    conv_state = None if state is None else state["conv"]
+    u, new_conv = causal_conv1d(u, p["conv"], conv_state)
+    a, b = rglru_gates(u, p)
+    h0 = (jnp.zeros((B, dl), F32) if state is None
+          else state["h"].astype(F32))
+    h, h_last = linear_scan(a, b, h0, chunk=chunk)
+    y = (gate * h).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"],
+                     preferred_element_type=F32).astype(x.dtype)
+    return out, {"h": h_last, "conv": new_conv}
+
+
+def init_rglru_state(cfg, batch: int, dtype=jnp.float32) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.d_lru), F32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_lru), dtype),
+    }

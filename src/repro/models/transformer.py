@@ -1,0 +1,709 @@
+"""Model assembly for every assigned architecture family.
+
+One functional implementation covers:
+
+* dense decoders (qwen2.5-32b/3b, qwen3-8b, olmo-1b),
+* MoE decoders (phi3.5-moe 16e top-2, mixtral 8e top-2 + SWA),
+* hybrid RG-LRU/local-attn (recurrentgemma-9b, pattern rglru,rglru,attn),
+* attention-free SSM (falcon-mamba-7b),
+* encoder-decoder audio (whisper-large-v3; conv frontend stubbed as
+  precomputed frame embeddings),
+* VLM (internvl2-2b; InternViT stubbed as precomputed patch embeddings
+  prefixed to the token sequence).
+
+Layers are *stacked*: parameters carry a leading ``reps`` axis and the depth
+loop is ``lax.scan`` over pattern repetitions (pattern-position groups are
+scanned together), keeping HLO size O(1) in depth — essential for compiling
+64-layer models against 512 placeholder devices.  Remainder layers
+(n_layers % len(pattern)) form an unrolled tail.
+
+Entry points:
+    init_params(cfg, key)                         -> params
+    forward(params, cfg, batch)                   -> logits            (full seq)
+    loss_fn(params, cfg, batch)                   -> scalar CE loss
+    init_cache(cfg, batch, cache_len)             -> decode cache
+    prefill(params, cfg, batch, cache)            -> (logits, cache)
+    decode_step(params, cfg, tokens, pos, cache)  -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+from .config import ModelConfig
+from .mamba import init_mamba_params, init_mamba_state, mamba_block
+from .rglru import init_rglru_params, init_rglru_state, rglru_block
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _norm_params(cfg, d, dtype):
+    if cfg.norm == "rms":
+        return jnp.zeros((d,), dtype)                 # (1 + scale) form
+    if cfg.norm == "ln":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    return None                                        # ln_np: non-parametric
+
+
+def _apply_norm(x, p, cfg):
+    if cfg.norm == "rms":
+        return L.rms_norm(x, p)
+    if cfg.norm == "ln":
+        return L.layer_norm(x, p["scale"], p["bias"])
+    return L.layer_norm(x, None, None)
+
+
+def _head_mask(cfg) -> Optional[jax.Array]:
+    """1 for real q-head slots, 0 for padded (GQA: padding interleaved per
+    KV group so grouped pairing stays exact; MHA: padded at the end)."""
+    H, Hp, Hkv = cfg.n_heads, cfg.padded_heads, cfg.padded_kv_heads
+    if Hp == H:
+        return None
+    if cfg.n_kv_heads == cfg.n_heads:          # MHA: end padding
+        return (jnp.arange(Hp) < H).astype(jnp.float32)
+    G = H // cfg.n_kv_heads
+    Gp = Hp // cfg.n_kv_heads
+    return ((jnp.arange(Hp) % Gp) < G).astype(jnp.float32)
+
+
+def _init_attn(key, cfg, dtype, cross: bool = False):
+    d, H, hd = cfg.d_model, cfg.padded_heads, cfg.hd
+    Hkv = cfg.padded_kv_heads
+    ks = jax.random.split(key, 4)
+    sc_in = 1.0 / jnp.sqrt(jnp.float32(d))
+    sc_out = 1.0 / jnp.sqrt(jnp.float32(cfg.n_heads * hd))
+    wq = jax.random.normal(ks[0], (d, H, hd)) * sc_in
+    wo = jax.random.normal(ks[3], (H, hd, d)) * sc_out
+    mask = _head_mask(cfg)
+    if mask is not None:  # zero padded heads: exact n_heads semantics
+        wq = wq * mask[None, :, None]
+        wo = wo * mask[:, None, None]
+    wk = jax.random.normal(ks[1], (d, Hkv, hd)) * sc_in
+    wv = jax.random.normal(ks[2], (d, Hkv, hd)) * sc_in
+    if Hkv > cfg.n_kv_heads:  # MHA KV padding: zero heads
+        kv_mask = (jnp.arange(Hkv) < cfg.n_kv_heads).astype(wk.dtype)
+        wk = wk * kv_mask[None, :, None]
+        wv = wv * kv_mask[None, :, None]
+    p = {
+        "wq": wq.astype(dtype),
+        "wk": wk.astype(dtype),
+        "wv": wv.astype(dtype),
+        "wo": wo.astype(dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((Hkv, hd), dtype)
+        p["bv"] = jnp.zeros((Hkv, hd), dtype)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _init_mlp(key, cfg, dtype):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    sc_in = 1.0 / jnp.sqrt(jnp.float32(d))
+    sc_out = 1.0 / jnp.sqrt(jnp.float32(ff))
+    if cfg.act == "silu":
+        if cfg.fused_gu:
+            return {
+                "w_gu": (jax.random.normal(ks[0], (d, 2, ff)) * sc_in
+                         ).astype(dtype),
+                "w_down": (jax.random.normal(ks[2], (ff, d)) * sc_out
+                           ).astype(dtype),
+            }
+        return {
+            "w_gate": (jax.random.normal(ks[0], (d, ff)) * sc_in).astype(dtype),
+            "w_up": (jax.random.normal(ks[1], (d, ff)) * sc_in).astype(dtype),
+            "w_down": (jax.random.normal(ks[2], (ff, d)) * sc_out).astype(dtype),
+        }
+    return {
+        "w_up": (jax.random.normal(ks[1], (d, ff)) * sc_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[2], (ff, d)) * sc_out).astype(dtype),
+    }
+
+
+def _init_moe(key, cfg, dtype):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    sc_in = 1.0 / jnp.sqrt(jnp.float32(d))
+    sc_out = 1.0 / jnp.sqrt(jnp.float32(ff))
+    if cfg.fused_gu:
+        return {
+            "router": (jax.random.normal(ks[0], (d, E)) * sc_in).astype(F32),
+            "w_gu": (jax.random.normal(ks[1], (E, d, 2, ff)) * sc_in
+                     ).astype(dtype),
+            "w_down": (jax.random.normal(ks[3], (E, ff, d)) * sc_out
+                       ).astype(dtype),
+        }
+    return {
+        "router": (jax.random.normal(ks[0], (d, E)) * sc_in).astype(F32),
+        "w_gate": (jax.random.normal(ks[1], (E, d, ff)) * sc_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d, ff)) * sc_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, ff, d)) * sc_out).astype(dtype),
+    }
+
+
+def _init_layer(key, cfg, kind: str, dtype, cross: bool = False):
+    """One decoder layer's params for a given kind."""
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": _norm_params(cfg, d, dtype)}
+    if kind == "attn":
+        p["attn"] = _init_attn(ks[0], cfg, dtype)
+        p["norm2"] = _norm_params(cfg, d, dtype)
+        if cfg.n_experts:
+            p["moe"] = _init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = _init_mlp(ks[1], cfg, dtype)
+    elif kind == "rglru":
+        p["rglru"] = init_rglru_params(ks[0], cfg, dtype)
+        p["norm2"] = _norm_params(cfg, d, dtype)
+        p["mlp"] = _init_mlp(ks[1], cfg, dtype)
+    elif kind == "mamba":
+        p["mamba"] = init_mamba_params(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["cross_attn"] = _init_attn(ks[2], cfg, dtype, cross=True)
+        p["norm_cross"] = _norm_params(cfg, d, dtype)
+    return p
+
+
+def _stack_init(init_one, n, key):
+    """vmap an init function over n split keys -> stacked leaves [n, ...]."""
+    return jax.vmap(init_one)(jax.random.split(key, n))
+
+
+def _depth_plan(cfg) -> Tuple[int, Tuple[str, ...]]:
+    """(reps, tail_kinds): n_layers = reps*len(pattern) + len(tail)."""
+    pat = cfg.block_pattern
+    reps = cfg.n_layers // len(pat)
+    tail = cfg.layer_kinds[reps * len(pat):]
+    return reps, tail
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    dtype = _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    d, V = cfg.d_model, cfg.vocab_size
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (V, d)) * 0.02).astype(dtype),
+        "final_norm": _norm_params(cfg, d, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = (jax.random.normal(keys[1], (V, d)) * 0.02
+                             ).astype(dtype)
+    reps, tail = _depth_plan(cfg)
+    pat = cfg.block_pattern
+    cross = cfg.is_encoder_decoder
+    if reps:
+        params["blocks"] = tuple(
+            _stack_init(
+                lambda k, kind=kind: _init_layer(k, cfg, kind, dtype, cross),
+                reps, jax.random.fold_in(keys[2], i))
+            for i, kind in enumerate(pat)
+        )
+    else:
+        params["blocks"] = ()
+    params["tail"] = tuple(
+        _init_layer(jax.random.fold_in(keys[3], i), cfg, kind, dtype, cross)
+        for i, kind in enumerate(tail)
+    )
+    if cfg.is_encoder_decoder:
+        enc_cfg = cfg  # same width; encoder is bidirectional full attention
+        params["encoder"] = {
+            "blocks": _stack_init(
+                lambda k: _init_layer(k, enc_cfg, "attn", dtype, cross=False),
+                cfg.encoder_layers, keys[4]),
+            "final_norm": _norm_params(cfg, d, dtype),
+        }
+    return params
+
+
+def param_count(params) -> int:
+    return int(sum(x.size for x in jax.tree_util.tree_leaves(params)))
+
+
+# ---------------------------------------------------------------------------
+# Layer application (full-sequence: training / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_full(x, p, cfg, positions, *, causal, window, schedule, enc_out=None):
+    h = _apply_norm(x, p["norm1"], cfg)
+    q, k, v = L.qkv_project(h, p["attn"], cfg, positions)
+    o = L.blocked_attention(q, k, v, causal=causal, window=window,
+                            schedule=schedule)
+    x = x + jax.ad_checkpoint.checkpoint_name(
+        L.out_project(o, p["attn"], cfg), "reduced_out")
+    if enc_out is not None:
+        h = _apply_norm(x, p["norm_cross"], cfg)
+        pc = p["cross_attn"]
+        q = jnp.einsum("bsd,dhk->bshk", h, pc["wq"],
+                       preferred_element_type=F32).astype(h.dtype)
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, pc["wk"],
+                       preferred_element_type=F32).astype(h.dtype)
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, pc["wv"],
+                       preferred_element_type=F32).astype(h.dtype)
+        o = L.blocked_attention(q, k, v, causal=False, window=0,
+                                schedule="masked")
+        x = x + L.out_project(o, pc, cfg)
+    h = _apply_norm(x, p["norm2"], cfg)
+    if cfg.n_experts:
+        mo, _ = L.moe_apply_manual(h, p["moe"], cfg)
+        x = x + jax.ad_checkpoint.checkpoint_name(mo, "reduced_out")
+    else:
+        x = x + jax.ad_checkpoint.checkpoint_name(
+            L.mlp(h, p["mlp"], cfg), "reduced_out")
+    return x
+
+
+def _layer_full(x, p, kind, cfg, positions, schedule, enc_out=None):
+    if kind == "attn":
+        return _attn_full(x, p, cfg, positions, causal=True,
+                          window=cfg.window, schedule=schedule,
+                          enc_out=enc_out)
+    if kind == "rglru":
+        h = _apply_norm(x, p["norm1"], cfg)
+        o, _ = rglru_block(h, p["rglru"])
+        x = x + o
+        h = _apply_norm(x, p["norm2"], cfg)
+        return x + L.mlp(h, p["mlp"], cfg)
+    if kind == "mamba":
+        h = _apply_norm(x, p["norm1"], cfg)
+        o, _ = mamba_block(h, p["mamba"], cfg)
+        return x + o
+    raise ValueError(kind)
+
+
+def _sp(x, cfg):
+    """Megatron-style sequence parallelism: between layers the residual
+    stream is sharded over "model" on S, so GSPMD materializes an
+    all-gather(bf16) before the column-parallel matmuls and a
+    reduce-scatter after the row-parallel ones instead of a full f32
+    all-reduce pair (≈4× fewer wire bytes per site)."""
+    if not cfg.seq_parallel:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return lax.with_sharding_constraint(x, P(None, "model", None))
+
+
+def _run_depth(x, params, cfg, positions, schedule, enc_out=None,
+               remat: bool = False):
+    pat = cfg.block_pattern
+
+    def body(carry, block_params):
+        y = carry
+        for kind, p in zip(pat, block_params):
+            y = _layer_full(y, p, kind, cfg, positions, schedule, enc_out)
+            y = _sp(y, cfg)
+        return y, None
+
+    if remat:
+        policy = jax.checkpoint_policies.nothing_saveable
+        if cfg.remat_save_reduced:
+            policy = jax.checkpoint_policies.save_only_these_names(
+                "reduced_out")
+        body = jax.checkpoint(body, policy=policy)
+    if params["blocks"]:
+        x, _ = lax.scan(body, x, params["blocks"])
+    reps, tail = _depth_plan(cfg)
+    for kind, p in zip(tail, params["tail"]):
+        x = _layer_full(x, p, kind, cfg, positions, schedule, enc_out)
+    return x
+
+
+def _encode(params, cfg, frames, schedule="masked", remat=False):
+    """Whisper encoder over stub frame embeddings [B, T, d]."""
+    B, T, d = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    enc = params["encoder"]
+
+    def body(carry, p):
+        return _attn_full(carry, p, cfg, positions, causal=False, window=0,
+                          schedule="masked"), None
+
+    if remat:
+        policy = jax.checkpoint_policies.nothing_saveable
+        if cfg.remat_save_reduced:
+            policy = jax.checkpoint_policies.save_only_these_names(
+                "reduced_out")
+        body = jax.checkpoint(body, policy=policy)
+    x, _ = lax.scan(body, frames, enc["blocks"])
+    return _apply_norm(x, enc["final_norm"], cfg)
+
+
+# ---------------------------------------------------------------------------
+# Public: forward / loss
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg, batch):
+    """Token (+ modality prefix) embedding.  Returns (x, positions,
+    text_offset) where text tokens start at text_offset in the sequence."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"][tokens]             # gather [B,S,d]
+    offset = 0
+    if cfg.family == "vlm" and "patches" in batch:
+        vis = batch["patches"].astype(x.dtype)      # [B, n_vis, d] (stub)
+        x = jnp.concatenate([vis, x], axis=1)
+        offset = vis.shape[1]
+    S_tot = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S_tot)[None], (B, S_tot))
+    return x, positions, offset
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
+            schedule: str = "masked", remat: bool = False) -> jax.Array:
+    """Full-sequence logits [B, S(+prefix), V]."""
+    x, positions, _ = _embed_inputs(params, cfg, batch)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(params, cfg, batch["frames"].astype(x.dtype),
+                          remat=remat)
+    x = _run_depth(x, params, cfg, positions, schedule, enc_out, remat=remat)
+    x = _apply_norm(x, params["final_norm"], cfg)
+    unembed = params.get("unembed", params["embed"])
+    return jnp.einsum("bsd,vd->bsv", x, unembed, preferred_element_type=F32)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
+            schedule: str = "masked", remat: bool = True) -> jax.Array:
+    """Next-token cross-entropy (text positions only for VLM)."""
+    logits = forward(params, cfg, batch, schedule=schedule, remat=remat)
+    tokens = batch["tokens"]
+    if cfg.family == "vlm" and "patches" in batch:
+        logits = logits[:, batch["patches"].shape[1]:]
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1].astype(F32)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask", jnp.ones_like(tgt, F32))
+    if mask.shape[1] == tokens.shape[1]:
+        mask = mask[:, 1:]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+def _cache_one(cfg, kind, batch, cache_len, dtype):
+    if kind == "attn":
+        size = min(cache_len, cfg.window) if cfg.window else cache_len
+        hkv = cfg.padded_kv_heads
+        return {
+            "k": jnp.zeros((batch, size, hkv, cfg.hd), dtype),
+            "v": jnp.zeros((batch, size, hkv, cfg.hd), dtype),
+            "pos": jnp.full((batch, size), -1, jnp.int32),
+        }
+    if kind == "rglru":
+        # hybrid: rglru layers carry recurrent state only
+        return init_rglru_state(cfg, batch, dtype)
+    if kind == "mamba":
+        return init_mamba_state(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=None) -> Dict[str, Any]:
+    """Decode cache pytree: stacked per pattern-position group + tail +
+    (enc-dec) cross-attention K/V."""
+    dtype = dtype or _dtype(cfg)
+    reps, tail = _depth_plan(cfg)
+
+    def stack(kind):
+        one = _cache_one(cfg, kind, batch, cache_len, dtype)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (reps,) + x.shape), one)
+
+    cache: Dict[str, Any] = {
+        "blocks": tuple(stack(kind) for kind in cfg.block_pattern) if reps
+        else (),
+        "tail": tuple(_cache_one(cfg, kind, batch, cache_len, dtype)
+                      for kind in tail),
+    }
+    if cfg.is_encoder_decoder:
+        T = cfg.encoder_seq
+        Hkv, hd = cfg.padded_kv_heads, cfg.hd
+        z = jnp.zeros((cfg.n_layers, batch, T, Hkv, hd), dtype)
+        cache["cross_k"], cache["cross_v"] = z, z
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+def _write_kv(cache, k_new, v_new, positions):
+    """Write S_new tokens into a (possibly ring) KV cache.
+    k_new [B,S,Hkv,hd]; positions [B,S] absolute (per-request), or [1,S]
+    shared — the ALIGNED path: one in-place dynamic-update-slice instead of
+    a scatter (XLA's scatter expansion materializes the whole cache;
+    EXPERIMENTS.md §Perf cell C)."""
+    size = cache["k"].shape[1]
+    B = k_new.shape[0]
+    if positions.shape[0] == 1:  # aligned batch: same slot for every row
+        slot = positions[0, 0] % size
+        k = lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+        v = lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+        pos_col = jnp.broadcast_to(positions[:1, :1],
+                                   (cache["pos"].shape[0], 1)
+                                   ).astype(cache["pos"].dtype)
+        pos = lax.dynamic_update_slice(cache["pos"], pos_col, (0, slot))
+        return {"k": k, "v": v, "pos": pos}
+    slots = positions % size
+    bidx = jnp.arange(B)[:, None]
+    k = cache["k"].at[bidx, slots].set(k_new)
+    v = cache["v"].at[bidx, slots].set(v_new)
+    pos = cache["pos"].at[bidx, slots].set(positions)
+    return {"k": k, "v": v, "pos": pos}
+
+
+def _attn_decode(x, p, cfg, cache, pos, enc_cross=None, aligned=False):
+    """One-token attention layer.  x [B,1,d]; pos [B] (aligned: all equal)."""
+    h = _apply_norm(x, p["norm1"], cfg)
+    q, k, v = L.qkv_project(h, p["attn"], cfg, pos[:, None])
+    cache = _write_kv(cache, k, v,
+                      pos[:1, None] if aligned else pos[:, None])
+    kvp = cache["pos"]
+    if cfg.window:  # fold window masking into the position array
+        kvp = jnp.where(kvp > pos[:, None] - cfg.window, kvp, -1)
+    o = L.decode_attention(q, cache["k"], cache["v"], pos, kvp)
+    x = x + L.out_project(o, p["attn"], cfg)
+    if enc_cross is not None:
+        ck, cv = enc_cross
+        h = _apply_norm(x, p["norm_cross"], cfg)
+        pc = p["cross_attn"]
+        q = jnp.einsum("bsd,dhk->bshk", h, pc["wq"],
+                       preferred_element_type=F32).astype(h.dtype)
+        T = ck.shape[1]
+        o = L.decode_attention(
+            q, ck, cv, jnp.full((x.shape[0],), T, jnp.int32),
+            jnp.broadcast_to(jnp.arange(T)[None], ck.shape[:2]))
+        x = x + L.out_project(o, pc, cfg)
+    h = _apply_norm(x, p["norm2"], cfg)
+    if cfg.n_experts:
+        mo, _ = L.moe_apply(h, p["moe"], cfg, group_size=h.shape[0],
+                            min_capacity=h.shape[0])
+        x = x + mo
+    else:
+        x = x + L.mlp(h, p["mlp"], cfg)
+    return x, cache
+
+
+def _layer_decode(x, p, kind, cfg, cache, pos, enc_cross=None,
+                  aligned=False):
+    if kind == "attn":
+        return _attn_decode(x, p, cfg, cache, pos, enc_cross, aligned)
+    if kind == "rglru":
+        h = _apply_norm(x, p["norm1"], cfg)
+        o, st = rglru_block(h, p["rglru"], state=cache)
+        x = x + o
+        h = _apply_norm(x, p["norm2"], cfg)
+        return x + L.mlp(h, p["mlp"], cfg), st
+    if kind == "mamba":
+        h = _apply_norm(x, p["norm1"], cfg)
+        o, st = mamba_block(h, p["mamba"], cfg, state=cache)
+        return x + o, st
+    raise ValueError(kind)
+
+
+def decode_step(params, cfg: ModelConfig, tokens: jax.Array, pos: jax.Array,
+                cache: Dict[str, Any]) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One decoding step.  tokens [B,1] int32; pos [B] per-request absolute
+    positions, or a scalar () for an ALIGNED batch (uniform position: the
+    KV write compiles to one in-place DUS instead of a scatter).
+
+    Returns (logits [B,1,V], new cache).
+    """
+    aligned = (pos.ndim == 0)
+    if aligned:
+        pos = jnp.broadcast_to(pos[None], (tokens.shape[0],))
+        pos = pos.astype(jnp.int32)
+    x = params["embed"][tokens]
+    pat = cfg.block_pattern
+    new_blocks = []
+    if params["blocks"]:
+        # scan over repetitions with the cache as CARRY: each step reads and
+        # writes only its layer slice via aliased dynamic-(update-)slice —
+        # scan-ys assembly would copy the full stacked cache every step
+        # (EXPERIMENTS.md §Perf cell C)
+        def body(carry, inp):
+            y, blocks_cache = carry
+            block_params, rep_idx = inp
+            blocks_cache = list(blocks_cache)
+            for pi, kind in enumerate(pat):
+                enc_cross = None
+                if kind == "attn" and cfg.is_encoder_decoder:
+                    layer_idx = rep_idx * len(pat) + pi
+                    enc_cross = (cache["cross_k"][layer_idx],
+                                 cache["cross_v"][layer_idx])
+                c_i = jax.tree_util.tree_map(
+                    lambda c: lax.dynamic_index_in_dim(
+                        c, rep_idx, 0, keepdims=False), blocks_cache[pi])
+                y, c_new = _layer_decode(y, block_params[pi], kind, cfg,
+                                         c_i, pos, enc_cross, aligned)
+                blocks_cache[pi] = jax.tree_util.tree_map(
+                    lambda full, new: lax.dynamic_update_index_in_dim(
+                        full, new.astype(full.dtype), rep_idx, 0),
+                    blocks_cache[pi], c_new)
+            return (y, tuple(blocks_cache)), None
+
+        reps = jax.tree_util.tree_leaves(params["blocks"][0])[0].shape[0]
+        (x, new_blocks), _ = lax.scan(
+            body, (x, cache["blocks"]),
+            (params["blocks"], jnp.arange(reps)))
+    reps_n, tail = _depth_plan(cfg)
+    new_tail = []
+    for i, (kind, p) in enumerate(zip(tail, params["tail"])):
+        enc_cross = None
+        if kind == "attn" and cfg.is_encoder_decoder:
+            layer_idx = reps_n * len(pat) + i
+            enc_cross = (cache["cross_k"][layer_idx],
+                         cache["cross_v"][layer_idx])
+        x, c = _layer_decode(x, p, kind, cfg, cache["tail"][i], pos,
+                             enc_cross, aligned)
+        new_tail.append(c)
+    new_cache = dict(cache)
+    new_cache["blocks"] = tuple(new_blocks) if new_blocks else ()
+    new_cache["tail"] = tuple(new_tail)
+    x = _apply_norm(x, params["final_norm"], cfg)
+    unembed = params.get("unembed", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", x, unembed,
+                        preferred_element_type=F32)
+    return logits, new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            cache: Dict[str, Any], *, schedule: str = "masked"
+            ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Process a full prompt, filling the decode cache.
+
+    Implemented as full-sequence forward (for logits) plus cache
+    construction; attention caches receive the last ``cache_size`` keys.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x, positions, offset = _embed_inputs(params, cfg, batch)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(params, cfg, batch["frames"].astype(x.dtype))
+        # precompute cross K/V for all decoder layers
+        cks, cvs = [], []
+        reps, tail = _depth_plan(cfg)
+        def cross_kv(p):
+            pc = p["cross_attn"]
+            k = jnp.einsum("btd,dhk->bthk", enc_out, pc["wk"],
+                           preferred_element_type=F32).astype(x.dtype)
+            v = jnp.einsum("btd,dhk->bthk", enc_out, pc["wv"],
+                           preferred_element_type=F32).astype(x.dtype)
+            return k, v
+        for gi, kind in enumerate(cfg.block_pattern):
+            stacked = params["blocks"][gi]
+            k, v = jax.vmap(cross_kv)(stacked)
+            cks.append(k)
+            cvs.append(v)
+        # interleave pattern groups back into layer order
+        ck = jnp.stack(cks, axis=1).reshape((-1,) + cks[0].shape[1:]) \
+            if cks else None
+        # NOTE: pattern interleave: groups are [reps, ...] per position;
+        # stack(axis=1) yields [reps, n_pos, ...] -> reshape to layer order.
+        cv = jnp.stack(cvs, axis=1).reshape((-1,) + cvs[0].shape[1:]) \
+            if cvs else None
+        for p in params["tail"]:
+            k, v = cross_kv(p)
+            ck = jnp.concatenate([ck, k[None]], 0) if ck is not None else k[None]
+            cv = jnp.concatenate([cv, v[None]], 0) if cv is not None else v[None]
+        cache = dict(cache)
+        cache["cross_k"], cache["cross_v"] = ck, cv
+
+    # Full-sequence pass that also returns per-layer K/V and final states.
+    pat = cfg.block_pattern
+    pos_grid = positions
+
+    def layer_with_cache(y, p, kind, block_cache):
+        if kind == "attn":
+            h = _apply_norm(y, p["norm1"], cfg)
+            q, k, v = L.qkv_project(h, p["attn"], cfg, pos_grid)
+            o = L.blocked_attention(q, k, v, causal=True, window=cfg.window,
+                                    schedule=schedule)
+            y = y + L.out_project(o, p["attn"], cfg)
+            if cfg.is_encoder_decoder:
+                # cross-attn folded in forward path for enc-dec prefill
+                h = _apply_norm(y, p["norm_cross"], cfg)
+                pc = p["cross_attn"]
+                qc = jnp.einsum("bsd,dhk->bshk", h, pc["wq"],
+                                preferred_element_type=F32).astype(h.dtype)
+                kc = jnp.einsum("btd,dhk->bthk", enc_out, pc["wk"],
+                                preferred_element_type=F32).astype(h.dtype)
+                vc = jnp.einsum("btd,dhk->bthk", enc_out, pc["wv"],
+                                preferred_element_type=F32).astype(h.dtype)
+                oc = L.blocked_attention(qc, kc, vc, causal=False, window=0)
+                y = y + L.out_project(oc, pc, cfg)
+            h = _apply_norm(y, p["norm2"], cfg)
+            if cfg.n_experts:
+                mo, _ = L.moe_apply_manual(h, p["moe"], cfg)
+                y = y + mo
+            else:
+                y = y + L.mlp(h, p["mlp"], cfg)
+            size = block_cache["k"].shape[1]
+            keep = min(size, k.shape[1])
+            new_cache = _write_kv(block_cache, k[:, -keep:], v[:, -keep:],
+                                  pos_grid[:, -keep:])
+            return y, new_cache
+        if kind == "rglru":
+            h = _apply_norm(y, p["norm1"], cfg)
+            o, st = rglru_block(h, p["rglru"])
+            y = y + o
+            h = _apply_norm(y, p["norm2"], cfg)
+            return y + L.mlp(h, p["mlp"], cfg), st
+        if kind == "mamba":
+            h = _apply_norm(y, p["norm1"], cfg)
+            o, st = mamba_block(h, p["mamba"], cfg)
+            return y + o, st
+        raise ValueError(kind)
+
+    new_blocks = cache["blocks"]
+    if params["blocks"]:
+        def body(carry, inp):
+            y = carry
+            block_params, block_cache = inp
+            ncs = []
+            for pi, kind in enumerate(pat):
+                y, nc = layer_with_cache(y, block_params[pi], kind,
+                                         block_cache[pi])
+                ncs.append(nc)
+            return y, tuple(ncs)
+
+        x, new_blocks = lax.scan(body, x,
+                                 (params["blocks"], cache["blocks"]))
+    new_tail = []
+    reps_n, tail = _depth_plan(cfg)
+    for i, (kind, p) in enumerate(zip(tail, params["tail"])):
+        x, nc = layer_with_cache(x, p, kind, cache["tail"][i])
+        new_tail.append(nc)
+    new_cache = dict(cache)
+    new_cache["blocks"] = new_blocks
+    new_cache["tail"] = tuple(new_tail)
+    x = _apply_norm(x, params["final_norm"], cfg)
+    unembed = params.get("unembed", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", x[:, -1:], unembed,
+                        preferred_element_type=F32)
+    return logits, new_cache

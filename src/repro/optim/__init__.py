@@ -1,0 +1,10 @@
+from .adamw import OptConfig, adamw_update, global_norm, init_opt_state, lr_at
+from .compression import (
+    compressed_psum_mean, dequantize_int8, init_error_state, quantize_int8,
+)
+
+__all__ = [
+    "OptConfig", "adamw_update", "global_norm", "init_opt_state", "lr_at",
+    "compressed_psum_mean", "dequantize_int8", "init_error_state",
+    "quantize_int8",
+]

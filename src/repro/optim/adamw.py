@@ -1,0 +1,89 @@
+"""AdamW with mixed precision: bf16 working params, f32 master copy + f32
+moments (the standard 14-bytes/param production layout).  Functional, pytree
+native, GSPMD-friendly (state shardings derived in launch/shardings.py with
+ZeRO-1 data-axis sharding).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_frac·lr."""
+    step = step.astype(F32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    f32 = lambda p: jnp.zeros_like(p, dtype=F32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree_util.tree_map(
+            lambda p: p.astype(F32), params),
+        "m": jax.tree_util.tree_map(f32, params),
+        "v": jax.tree_util.tree_map(f32, params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(F32))) for x in leaves))
+
+
+def adamw_update(grads, opt_state, params, cfg: OptConfig
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(F32)
+    bc2 = 1.0 - b2 ** step.astype(F32)
+
+    def upd(g, m, v, master, p):
+        g = g.astype(F32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        new_master = master - lr * (
+            mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * master)
+        return m, v, new_master, new_master.astype(p.dtype)
+
+    flat = jax.tree_util.tree_map(
+        upd, grads, opt_state["m"], opt_state["v"], opt_state["master"],
+        params)
+    # unzip the per-leaf 4-tuples via tree_transpose (robust to empty
+    # containers in the param structure)
+    outer = jax.tree_util.tree_structure(params)
+    inner = jax.tree_util.tree_structure((0, 0, 0, 0))
+    m, v, master, new_params = jax.tree_util.tree_transpose(
+        outer, inner, flat)
+    new_state = {"step": step, "master": master, "m": m, "v": v}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,65 @@
+"""Error-feedback int8 gradient compression for the data-parallel all-reduce.
+
+On 1000+ node clusters the DP gradient reduction is DCN-bound; int8
+compression cuts the wire bytes 4× (vs f32 master grads / 2× vs bf16).  The
+scheme is EF-SGD style:
+
+    v   = g + err                 (carry the previous round's residual)
+    q   = round(v / scale) int8   (per-tensor scale)
+    out = mean over DP of dequantized q
+    err'= v − dequant(q)          (residual stays local; bounded, no drift)
+
+``compressed_psum_mean`` is written against a named mesh axis and is used
+inside ``shard_map`` train steps when ``grad_compression=True``; the int8
+``all_gather`` is what lands in the HLO, so the roofline's collective term
+sees the 4× byte reduction (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def quantize_int8(v: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(v)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(v / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(F32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(F32) * scale
+
+
+def init_error_state(grads) -> Any:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, F32), grads)
+
+
+def compressed_psum_mean(grads, err_state, axis_name: str
+                         ) -> Tuple[Any, Any]:
+    """Mean-reduce grads over ``axis_name`` with int8 wire format.
+
+    Must run inside shard_map with ``axis_name`` bound.  Returns
+    (mean_grads f32, new_err_state).
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, err):
+        v = g.astype(F32) + err
+        q, scale = quantize_int8(v)
+        qg = jax.lax.all_gather(q, axis_name)          # int8 on the wire
+        sg = jax.lax.all_gather(scale, axis_name)
+        deq = qg.astype(F32) * sg.reshape((-1,) + (1,) * g.ndim)
+        mean = deq.sum(axis=0) / n
+        new_err = v - dequantize_int8(q, scale)
+        return mean, new_err
+
+    pairs = jax.tree_util.tree_map(one, grads, err_state)
+    outer = jax.tree_util.tree_structure(grads)
+    inner = jax.tree_util.tree_structure((0, 0))
+    mean, err = jax.tree_util.tree_transpose(outer, inner, pairs)
+    return mean, err

@@ -1,0 +1,7 @@
+from .hlo import HloCosts, analyze, parse_computations
+from .terms import HBM_BW, ICI_BW, PEAK_FLOPS, model_flops, roofline_terms
+
+__all__ = [
+    "HloCosts", "analyze", "parse_computations",
+    "HBM_BW", "ICI_BW", "PEAK_FLOPS", "model_flops", "roofline_terms",
+]

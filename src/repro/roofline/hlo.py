@@ -1,0 +1,366 @@
+"""Loop-aware HLO text analysis for roofline terms.
+
+XLA's ``compiled.cost_analysis()`` visits every computation ONCE — a model
+that ``lax.scan``s over 64 layers reports 1/64 of the real FLOPs (verified
+empirically in tests/test_roofline.py).  The dry run therefore needs its own
+analyzer.  This module parses ``compiled.as_text()`` into computations,
+builds a per-computation symbol table (post-optimization HLO references
+operands by name only), resolves *execution multipliers* (while-loop trip
+counts are static constants embedded in jax-scan condition computations),
+and accumulates:
+
+* ``dot_flops``         — 2 · prod(result dims) · contracted size, per dot
+* ``collective_bytes``  — wire bytes per device for all-gather / all-reduce /
+                          reduce-scatter / all-to-all / collective-permute
+                          (ring-algorithm accounting over the replica group)
+* ``hbm_bytes``         — Σ result bytes of ops at fusion boundaries ×2
+                          (read≈write) — an estimate of HBM traffic
+
+All numbers are per-device totals (SPMD: the module is the per-device
+program).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# "%name = <result-type> <opname>(<rest>"   (result may be a tuple; tuple
+# bodies can contain /*index=N*/ comments, hence [^()] rather than [^=])
+_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*"
+    r"((?:\([^()]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\((.*)$")
+_CALL_ONE = re.compile(
+    r"(body|condition|to_apply|calls)=%?([\w\.\-]+)")
+_CALL_SET = re.compile(
+    r"(calls|branch_computations)=\{([^}]*)\}")
+_RG_RE = re.compile(r"replica_groups=\{(.*?)\}\}?")
+_RG_V2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+
+def _shapes_in(txt: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(shapes: List[Tuple[str, List[int]]]) -> int:
+    return sum(math.prod(d) * _DTYPE_BYTES[t] if d else _DTYPE_BYTES[t]
+               for t, d in shapes)
+
+
+@dataclass
+class OpLine:
+    name: str
+    result_txt: str      # result type text (array or tuple)
+    op: str
+    rest: str            # operands + attributes text
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: List[OpLine] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # name -> result txt
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            if s.endswith("{") and "->" in s and ("(" in s):
+                toks = s.split()
+                name = toks[1] if toks[0] == "ENTRY" else toks[0]
+                name = name.lstrip("%")
+                # strip any attached "(":
+                name = name.split("(")[0]
+                cur = Computation(name=name)
+            continue
+        if s == "}" or s.startswith("} "):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _LINE_RE.match(line)
+        if not m:
+            continue
+        name, res, op, rest = m.groups()
+        cur.lines.append(OpLine(name=name, result_txt=res, op=op, rest=rest))
+        cur.symbols[name] = res
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _called_comps(rest: str) -> List[str]:
+    out: List[str] = []
+    for m in _CALL_ONE.finditer(rest):
+        out.append(m.group(2))
+    for m in _CALL_SET.finditer(rest):
+        for nm in m.group(2).split(","):
+            nm = nm.strip().lstrip("%")
+            if nm:
+                out.append(nm)
+    return out
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Max integer constant reachable from the condition computation (exact
+    for jax scans: the bound is a constant compared against the induction
+    variable, possibly inside a wrapped-compare fusion)."""
+    best = 1
+    seen = set()
+
+    def rec(name: str):
+        nonlocal best
+        if name in seen or name not in comps:
+            return
+        seen.add(name)
+        for ln in comps[name].lines:
+            if ln.op == "constant":
+                mm = re.search(r"constant\((-?\d+)\)", ln.op + "(" + ln.rest)
+                if mm:
+                    best = max(best, int(mm.group(1)))
+            for mm in re.finditer(r"constant\((-?\d+)\)", ln.rest):
+                best = max(best, int(mm.group(1)))
+            for sub in _called_comps(ln.rest):
+                rec(sub)
+
+    rec(cond_name)
+    return best
+
+
+def _operand_names(rest: str) -> List[str]:
+    """Operand instruction names inside the call parens (up to the closing
+    paren at depth 0)."""
+    depth = 1
+    out = []
+    cur = ""
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        cur += ch
+    for m in re.finditer(r"%([\w\.\-]+)", cur):
+        out.append(m.group(1))
+    return out
+
+
+def _dot_flops(ln: OpLine, comp: Computation) -> float:
+    res = _shapes_in(ln.result_txt)
+    if not res:
+        return 0.0
+    out_elems = math.prod(res[0][1]) if res[0][1] else 1
+    ops = _operand_names(ln.rest)
+    if not ops:
+        return 0.0
+    lhs_txt = comp.symbols.get(ops[0], "")
+    lhs = _shapes_in(lhs_txt)
+    if not lhs:
+        return 0.0
+    ldims = lhs[0][1]
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ln.rest)
+    contracted = 1
+    if m and m.group(1):
+        for d in m.group(1).split(","):
+            if d and int(d) < len(ldims):
+                contracted *= ldims[int(d)]
+    return 2.0 * out_elems * contracted
+
+
+def _group_size(rest: str, total_devices: int) -> int:
+    m = _RG_V2.search(rest)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _RG_RE.search(rest)
+    if m:
+        first = m.group(1).split("},{")[0].strip("{}")
+        ids = [x for x in first.split(",") if x.strip() != ""]
+        return max(1, len(ids))
+    return total_devices
+
+
+def _collective_bytes(op: str, ln: OpLine, total_devices: int) -> float:
+    """Per-device wire bytes (ring algorithm over the replica group)."""
+    n = _group_size(ln.rest, total_devices)
+    if n <= 1:
+        return 0.0
+    shapes = _shapes_in(ln.result_txt)
+    out_bytes = _bytes_of(shapes)
+    if op == "all-gather":
+        return out_bytes * (n - 1) / n
+    if op == "all-reduce":
+        return 2.0 * out_bytes * (n - 1) / n
+    if op == "reduce-scatter":
+        return out_bytes * (n - 1)          # result is one shard
+    if op in ("all-to-all", "ragged-all-to-all"):
+        return out_bytes * (n - 1) / n
+    if op == "collective-permute":
+        return float(out_bytes)
+    return 0.0
+
+
+# while results are loop-carried state updated in place (donated/aliased);
+# counting the whole tuple per step would double-charge the body's writes
+_SKIP_MEM = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "copy", "after-all", "add-dependency", "domain",
+             "while"}
+
+
+@dataclass
+class HloCosts:
+    dot_flops: float = 0.0
+    collective_bytes: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_breakdown: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+    while_trips: List[int] = field(default_factory=list)
+
+
+def _inplace_update_bytes(comps, body_name: str) -> Optional[int]:
+    """If a fusion body's root is a dynamic-update-slice — or a TUPLE whose
+    elements are DUSes / passthroughs (XLA's scan-ys assembly) — the fusion
+    writes in place: traffic = the update slices, not the whole buffers.
+    Returns the slice bytes, or None if the root isn't update-shaped."""
+    body = comps.get(body_name)
+    if body is None or not body.lines:
+        return None
+    by_name = {ln.name: ln for ln in body.lines}
+
+    def resolve(line):
+        """Follow convert/bitcast/copy chains (XLA CPU's FloatNormalization
+        wraps bf16 DUS in f32 converts — a CPU lowering artifact; the TPU
+        target updates in place)."""
+        seen = 0
+        while line is not None and line.op in ("convert", "bitcast", "copy") \
+                and seen < 8:
+            ops_ = _operand_names(line.rest)
+            line = by_name.get(ops_[0]) if ops_ else None
+            seen += 1
+        return line
+
+    def dus_update_bytes(line) -> Optional[int]:
+        ops_ = _operand_names(line.rest)
+        if len(ops_) < 2:
+            return None
+        return _bytes_of(_shapes_in(body.symbols.get(ops_[1], "")))
+
+    root = resolve(body.lines[-1])
+    if root is None:
+        return None
+    if root.op == "dynamic-update-slice":
+        return dus_update_bytes(root)
+    if root.op != "tuple":
+        return None
+    total = 0
+    for op_name in _operand_names(root.rest):
+        ln = resolve(by_name.get(op_name))
+        if ln is None:  # parameter passthrough: no traffic
+            continue
+        if ln.op == "dynamic-update-slice":
+            b = dus_update_bytes(ln)
+            if b is None:
+                return None
+            total += b
+        elif ln.op in ("parameter", "get-tuple-element"):
+            continue
+        else:
+            total += _bytes_of(_shapes_in(ln.result_txt))
+    return total
+
+
+def analyze(hlo: str, total_devices: int = 1) -> HloCosts:
+    comps = parse_computations(hlo)
+    fusion_bodies: set = set()
+    for c in comps.values():
+        for ln in c.lines:
+            if ln.op == "fusion":
+                fusion_bodies.update(_called_comps(ln.rest))
+
+    entry = None
+    for name in comps:
+        if name.startswith("main"):
+            entry = name
+            break
+    if entry is None:
+        referenced: set = set()
+        for c in comps.values():
+            for ln in c.lines:
+                referenced.update(_called_comps(ln.rest))
+        for name in comps:
+            if name not in referenced:
+                entry = name
+                break
+
+    costs = HloCosts()
+
+    def visit(name: str, mult: float, stack: tuple):
+        if name not in comps or name in stack:
+            return
+        c = comps[name]
+        in_fusion = name in fusion_bodies
+        for ln in c.lines:
+            base_op = ln.op.replace("-start", "") if ln.op.endswith("-start") \
+                else ln.op
+            if ln.op == "dot":
+                costs.dot_flops += mult * _dot_flops(ln, c)
+            elif base_op in COLLECTIVES:
+                b = _collective_bytes(base_op, ln, total_devices)
+                costs.collective_bytes += mult * b
+                costs.collective_breakdown[base_op] = (
+                    costs.collective_breakdown.get(base_op, 0.0) + mult * b)
+                costs.collective_counts[base_op] = (
+                    costs.collective_counts.get(base_op, 0) + 1)
+            if not in_fusion and ln.op not in _SKIP_MEM:
+                bytes_ = None
+                if ln.op == "dynamic-update-slice":
+                    # in-place DUS: traffic = the updated slice
+                    ops_ = _operand_names(ln.rest)
+                    upd = c.symbols.get(ops_[1], "") if len(ops_) > 1 else ""
+                    bytes_ = _bytes_of(_shapes_in(upd))
+                elif ln.op == "fusion":
+                    for sub in _called_comps(ln.rest):
+                        b = _inplace_update_bytes(comps, sub)
+                        if b is not None:
+                            bytes_ = b
+                            break
+                if bytes_ is None:
+                    bytes_ = _bytes_of(_shapes_in(ln.result_txt))
+                costs.hbm_bytes += 2.0 * mult * bytes_
+            if ln.op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", ln.rest)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ln.rest)
+                trips = _trip_count(comps, mc.group(1)) if mc else 1
+                costs.while_trips.append(trips)
+                if mb:
+                    visit(mb.group(1), mult * trips, stack + (name,))
+            elif ln.op in ("fusion", "call", "custom-call", "map", "reduce",
+                           "reduce-window", "scatter", "sort",
+                           "select-and-scatter", "conditional",
+                           "async-start"):
+                for sub in _called_comps(ln.rest):
+                    visit(sub, mult, stack + (name,))
+        return
+
+    if entry:
+        visit(entry, 1.0, ())
+    return costs

@@ -1,0 +1,107 @@
+"""Roofline terms (deliverable g).
+
+Hardware constants (TPU v5e target, per the assignment):
+    peak bf16     197 TFLOP/s per chip
+    HBM bandwidth 819 GB/s per chip
+    ICI           ~50 GB/s per link; a v5e chip has 4 ICI links on the 2D
+                  torus — we charge collectives against ONE link's bandwidth
+                  (conservative; ring collectives stream over one logical
+                  ring unless XLA splits them).
+
+Terms per (arch × shape × mesh), from the loop-aware HLO analysis (all
+per-device quantities — SPMD modules are per-device programs):
+
+    compute_s    = dot_flops / PEAK_FLOPS
+    memory_s     = hbm_bytes / HBM_BW
+    collective_s = collective_bytes / ICI_BW
+
+plus MODEL_FLOPS (analytic 6·N·D / 2·N·D useful compute) and the useful /
+compiled compute ratio that catches remat and masked-attention waste.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.models.config import ModelConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Analytic useful FLOPs for the whole cell (all devices).
+
+    Matmul-participating active params: active_params() minus the embedding
+    gather table (tied embeddings count once — as the unembedding matmul).
+    Attention score/AV FLOPs added separately (they are not param FLOPs).
+    """
+    N = cfg.active_params()
+    emb = cfg.vocab_size * cfg.d_model
+    N_mm = N - emb if not cfg.tie_embeddings else N
+    N_enc = cfg.encoder_params()
+    N_dec = N_mm - N_enc          # decoder-side matmul params
+    B, S = shape.global_batch, shape.seq_len
+
+    def self_attn_flops(tokens: float, ctx: float) -> float:
+        if cfg.attn_free:
+            return 0.0
+        n_attn = sum(1 for k in cfg.layer_kinds if k == "attn")
+        return tokens * n_attn * 4.0 * cfg.n_heads * cfg.hd * ctx  # QK+AV
+
+    def cross_attn_flops(tokens: float) -> float:
+        if not cfg.is_encoder_decoder:
+            return 0.0
+        return tokens * cfg.n_layers * 4.0 * cfg.n_heads * cfg.hd * \
+            cfg.encoder_seq
+
+    def encoder_flops() -> float:
+        if not cfg.is_encoder_decoder:
+            return 0.0
+        toks = float(B * cfg.encoder_seq)
+        return 2.0 * N_enc * toks + toks * cfg.encoder_layers * 4.0 * \
+            cfg.n_heads * cfg.hd * cfg.encoder_seq
+
+    if shape.kind == "train":
+        tokens = float(B * S)
+        ctx = min(S, cfg.window) if cfg.window else S / 2.0
+        fwd = (2.0 * N_dec * tokens + self_attn_flops(tokens, ctx)
+               + cross_attn_flops(tokens) + encoder_flops())
+        return 3.0 * fwd
+    if shape.kind == "prefill":
+        tokens = float(B * S)
+        ctx = min(S, cfg.window) if cfg.window else S / 2.0
+        return (2.0 * N_dec * tokens + self_attn_flops(tokens, ctx)
+                + cross_attn_flops(tokens) + encoder_flops())
+    # decode: one new token per sequence against a ctx-long cache; the
+    # encoder is NOT re-run (cross K/V live in the cache)
+    tokens = float(B)
+    ctx = min(S, cfg.window) if cfg.window else S
+    cross = tokens * cfg.n_layers * 4.0 * cfg.n_heads * cfg.hd * \
+        cfg.encoder_seq if cfg.is_encoder_decoder else 0.0
+    return 2.0 * N_dec * tokens + self_attn_flops(tokens, ctx) + cross
+
+
+def roofline_terms(cfg: ModelConfig, shape: ShapeConfig, costs,
+                   n_devices: int) -> Dict[str, float]:
+    compute_s = costs.dot_flops / PEAK_FLOPS
+    memory_s = costs.hbm_bytes / HBM_BW
+    collective_s = costs.collective_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    per_dev_useful = mf / n_devices
+    total = max(compute_s, memory_s, collective_s)
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": bottleneck,
+        "model_flops_total": mf,
+        "useful_compute_ratio": (per_dev_useful / costs.dot_flops
+                                 if costs.dot_flops else 0.0),
+        "roofline_fraction": (per_dev_useful / PEAK_FLOPS) / total
+        if total > 0 else 0.0,
+        "step_time_lower_bound_s": total,
+    }

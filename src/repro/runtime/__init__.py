@@ -1,0 +1,27 @@
+from .state import BucketedState, owner_lookup, route
+from .migration import (
+    JaxBackend, MigrationExecutor, MigrationReport, Move, SimBackend,
+    make_collective_migration, make_migration_step, move_list,
+    naive_duration, phase_duration, plan_to_permutation, required_capacity,
+    schedule_phases,
+)
+from .checkpoint import CheckpointManager, RestoreReport
+from .ft import (
+    SpeedTracker, physical_migration_cost, recovery_plan, restored_bytes,
+    weighted_plan,
+)
+from .elastic import ElasticController, ElasticEvent
+from .serving import ElasticServingSim, ElasticWordCount, SimConfig
+
+__all__ = [
+    "BucketedState", "owner_lookup", "route",
+    "JaxBackend", "MigrationExecutor", "MigrationReport", "Move",
+    "SimBackend", "make_collective_migration", "make_migration_step",
+    "move_list", "naive_duration", "phase_duration", "plan_to_permutation",
+    "required_capacity", "schedule_phases",
+    "CheckpointManager", "RestoreReport",
+    "SpeedTracker", "physical_migration_cost", "recovery_plan",
+    "restored_bytes", "weighted_plan",
+    "ElasticController", "ElasticEvent",
+    "ElasticServingSim", "ElasticWordCount", "SimConfig",
+]

@@ -1,0 +1,175 @@
+"""Sharded checkpointing with topology-aware restore (restore IS a
+migration).
+
+Layout on disk:
+    <dir>/step_<k>/manifest.json      m, boundaries, per-bucket bytes, extra
+    <dir>/step_<k>/bucket_<j>.npz     one file per bucket (the task state)
+    <dir>/step_<k>/extra.npz          non-bucketed tree (params, opt state)
+
+Restore onto n' nodes plans with SSM from the checkpoint's assignment:
+nodes that survive a restart re-open their local buckets (zero read), and
+only reassigned buckets hit storage — checkpoint-restart cost becomes the
+paper's migration cost.  ``save`` is atomic (tmp + rename) and optionally
+asynchronous (background thread), so the train loop never blocks on fsync.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import Assignment, MigrationPlan, ssm
+from .state import BucketedState
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def _sub(flat: Dict[str, np.ndarray], key: str) -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    for kk, vv in flat.items():
+        parts = kk.split("/", 1)
+        if parts[0] == key:
+            out[parts[1] if len(parts) > 1 else ""] = vv
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray], proto) -> Any:
+    if isinstance(proto, dict):
+        return {k: _unflatten(_sub(flat, k), v) for k, v in proto.items()}
+    if isinstance(proto, (list, tuple)):
+        seq = [_unflatten(_sub(flat, str(i)), v)
+               for i, v in enumerate(proto)]
+        return type(proto)(seq)
+    return flat[""] if "" in flat else next(iter(flat.values()))
+
+
+@dataclass
+class RestoreReport:
+    plan: Optional[MigrationPlan]
+    bytes_read: float            # storage reads (reassigned buckets)
+    bytes_resident: float        # buckets reopened in place (no read)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, state: BucketedState, assignment: Assignment,
+             extra: Any = None, async_: bool = False) -> None:
+        if async_:
+            self.wait()
+            snap_buckets = [
+                {k: np.array(v) for k, v in _flatten(b).items()}
+                for b in state.buckets]
+            extra_flat = _flatten(extra) if extra is not None else None
+            self._thread = threading.Thread(
+                target=self._write, args=(step, snap_buckets, assignment,
+                                          extra_flat), daemon=True)
+            self._thread.start()
+        else:
+            snap = [_flatten(b) for b in state.buckets]
+            self._write(step, snap, assignment,
+                        _flatten(extra) if extra is not None else None)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step, flat_buckets, assignment, extra_flat):
+        final = self.dir / f"step_{step}"
+        tmp = Path(tempfile.mkdtemp(dir=self.dir, prefix=".tmp_"))
+        try:
+            sizes = []
+            for j, flat in enumerate(flat_buckets):
+                np.savez(tmp / f"bucket_{j}.npz", **flat)
+                sizes.append(float(sum(v.nbytes for v in flat.values())))
+            if extra_flat is not None:
+                np.savez(tmp / "extra.npz", **extra_flat)
+            manifest = {
+                "step": step,
+                "m": len(flat_buckets),
+                "intervals": list(map(list, assignment.intervals)),
+                "bucket_bytes": sizes,
+                "has_extra": extra_flat is not None,
+            }
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            if final.exists():
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+        finally:
+            if tmp.exists():
+                shutil.rmtree(tmp, ignore_errors=True)
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # -- load ---------------------------------------------------------------
+    def steps(self) -> List[int]:
+        return sorted(int(p.name.split("_")[1])
+                      for p in self.dir.glob("step_*"))
+
+    def latest(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def manifest(self, step: int) -> dict:
+        return json.loads(
+            (self.dir / f"step_{step}" / "manifest.json").read_text())
+
+    def restore(self, step: int, n_new: int, w: np.ndarray, tau: float,
+                extra_proto: Any = None,
+                alive_nodes: Optional[set] = None
+                ) -> Tuple[BucketedState, Assignment, RestoreReport, Any]:
+        """Restore onto ``n_new`` nodes.  ``alive_nodes``: node ids whose
+        local buckets survive in memory/disk-cache (their buckets are free
+        to reopen); default: all checkpoint nodes survive."""
+        man = self.manifest(step)
+        m = man["m"]
+        old = Assignment(m, tuple(tuple(iv) for iv in man["intervals"]))
+        s = np.asarray(man["bucket_bytes"])
+        plan = ssm(old, n_new, np.asarray(w, dtype=np.float64), s, tau)
+        owner_old = old.owner_of()
+        n_total = max(old.n_nodes, plan.new.n_nodes)
+        owner_new = plan.new.padded(n_total).owner_of()
+        alive = set(range(old.n_nodes)) if alive_nodes is None else alive_nodes
+        buckets = []
+        read = resident = 0.0
+        base = self.dir / f"step_{step}"
+        for j in range(m):
+            flat = dict(np.load(base / f"bucket_{j}.npz"))
+            buckets.append(flat)
+            if owner_new[j] == owner_old[j] and owner_old[j] in alive:
+                resident += s[j]
+            else:
+                read += s[j]
+        extra = None
+        if man["has_extra"] and extra_proto is not None:
+            extra = _unflatten(dict(np.load(base / "extra.npz")), extra_proto)
+        state = BucketedState(buckets)
+        return state, plan.new, RestoreReport(plan, read, resident), extra

@@ -1,0 +1,113 @@
+"""ElasticController: ties the planner, executor, checkpoints and fault
+tolerance together — the component a cluster scheduler talks to.
+
+Responsibilities:
+* watch per-bucket workload (w_j) and state sizes (|s_j|),
+* decide/accept topology changes (scale up/down, rebalance on skew,
+  straggler reweighting, failure recovery),
+* compute the migration strategy via ElasticPlanner (ssm | mtm | baselines),
+* execute it via MigrationExecutor (live / progressive / suspend),
+* keep the node-count history that estimates the MTM (paper §2.2),
+* periodic checkpoints; restore-with-resharding on restart.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core import (
+    Assignment, ElasticPlanner, MigrationPlan, MTM, satisfies_balance,
+)
+from .checkpoint import CheckpointManager
+from .ft import SpeedTracker, recovery_plan, restored_bytes
+from .migration import MigrationExecutor, MigrationReport
+from .state import BucketedState
+
+
+@dataclass
+class ElasticEvent:
+    kind: str                      # scale | rebalance | recover | straggler
+    n_before: int
+    n_after: int
+    cost_bytes: float
+    duration_s: float
+    details: dict = field(default_factory=dict)
+
+
+class ElasticController:
+    def __init__(self, m: int, n_nodes: int,
+                 planner: Optional[ElasticPlanner] = None,
+                 executor: Optional[MigrationExecutor] = None,
+                 ckpt: Optional[CheckpointManager] = None,
+                 tau: float = 1.2):
+        cuts = np.linspace(0, m, n_nodes + 1).round().astype(int)
+        self.assign = Assignment.from_boundaries(m, list(cuts))
+        self.m = m
+        self.tau = tau
+        self.planner = planner or ElasticPlanner(policy="ssm")
+        self.executor = executor or MigrationExecutor(mode="live")
+        self.ckpt = ckpt
+        self.history: List[int] = [n_nodes]
+        self.speeds = SpeedTracker(n_nodes)
+        self.events: List[ElasticEvent] = []
+
+    # -- observations --------------------------------------------------------
+    @property
+    def n_nodes(self) -> int:
+        return sum(1 for lo, hi in self.assign.intervals if hi > lo)
+
+    def balance_violated(self, w: np.ndarray) -> bool:
+        return not satisfies_balance(self.assign, w, self.n_nodes, self.tau)
+
+    def estimate_mtm(self, n_min: int, n_max: int) -> MTM:
+        return MTM.estimate(self.history, n_min, n_max)
+
+    # -- actions --------------------------------------------------------------
+    def _apply(self, plan: MigrationPlan, state: BucketedState,
+               kind: str, **details) -> Tuple[MigrationPlan, MigrationReport]:
+        placement = self.assign.owner_of()
+        report = self.executor.execute(plan, state, placement)
+        n_before = self.n_nodes
+        self.assign = plan.new
+        self.history.append(self.n_nodes)
+        self.events.append(ElasticEvent(
+            kind=kind, n_before=n_before, n_after=self.n_nodes,
+            cost_bytes=plan.cost, duration_s=report.duration_s,
+            details=details))
+        return plan, report
+
+    def scale(self, n_new: int, w: np.ndarray, state: BucketedState,
+              tau: Optional[float] = None):
+        plan = self.planner.plan(self.assign, n_new, w,
+                                 state.bucket_bytes(),
+                                 tau=tau if tau is not None else self.tau)
+        return self._apply(plan, state, "scale")
+
+    def rebalance(self, w: np.ndarray, state: BucketedState):
+        plan = self.planner.plan(self.assign, self.n_nodes, w,
+                                 state.bucket_bytes(), tau=self.tau)
+        return self._apply(plan, state, "rebalance")
+
+    def maybe_rebalance(self, w: np.ndarray, state: BucketedState):
+        if self.balance_violated(w):
+            return self.rebalance(w, state)
+        return None
+
+    def recover(self, failed: Set[int], w: np.ndarray, state: BucketedState,
+                n_new: Optional[int] = None):
+        """Failure recovery: lost buckets restored from checkpoint, surviving
+        state kept in place (ft.recovery_plan)."""
+        s = state.bucket_bytes()
+        n_target = n_new if n_new is not None else self.n_nodes - len(failed)
+        plan = recovery_plan(self.assign, failed, n_target, w, s, self.tau)
+        ck_bytes = restored_bytes(self.assign, failed, s)
+        return self._apply(plan, state, "recover", failed=sorted(failed),
+                           checkpoint_bytes=ck_bytes)
+
+    def checkpoint(self, step: int, state: BucketedState, extra=None,
+                   async_: bool = True):
+        if self.ckpt is None:
+            raise RuntimeError("no CheckpointManager configured")
+        self.ckpt.save(step, state, self.assign, extra=extra, async_=async_)

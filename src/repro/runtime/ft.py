@@ -1,0 +1,171 @@
+"""Fault tolerance: failure recovery as a migration, straggler mitigation as
+weighted balance (paper §8 "future work: apply our migration techniques to
+fault recovery" — implemented here).
+
+Failure recovery
+----------------
+When node(s) die, their buckets must be restored from the last checkpoint
+*wherever they land* — that restore cost is strategy-independent.  Setting
+``s_j := 0`` for the lost buckets therefore makes SSM optimize exactly the
+right objective: keep the survivors' state in place, balance the load, and
+let the lost buckets fall anywhere.  Dead node ids are relabeled off the
+plan afterwards (they can only hold zero-gain intervals, so relabeling
+changes nothing).
+
+Straggler mitigation
+--------------------
+A straggler (slow node) is handled by generalizing Def. 2.1 to weighted
+capacity: node i's budget is (1+τ)·W·speed_i/Σspeed.  SSM's DP assumes
+node-anonymous caps, so we quantize speeds into *virtual nodes*: a node at
+relative speed q gets round(q·granularity) virtual slots; SSM plans over
+virtual slots; slots then collapse back to physical nodes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core import Assignment, MigrationPlan, ssm
+from repro.core.ssm import _plan
+
+
+def recovery_plan(old: Assignment, failed: Set[int], n_new: int,
+                  w: np.ndarray, s: np.ndarray, tau: float
+                  ) -> MigrationPlan:
+    """Plan after losing ``failed`` node ids (restore-from-checkpoint cost is
+    uniform, so lost buckets get s=0 for planning; reported plan cost is the
+    *network* migration cost among survivors — checkpoint read bytes are
+    reported separately by the caller)."""
+    s_eff = np.asarray(s, dtype=np.float64).copy()
+    owner = old.owner_of()
+    for nid in failed:
+        s_eff[owner == nid] = 0.0
+    plan = ssm(old, n_new, w, s_eff, tau)
+    # relabel: dead nodes may only hold zero-gain intervals — move them to
+    # free alive slots.
+    ivs = list(plan.new.intervals)
+    n_total = len(ivs)
+    used_alive = {i for i, iv in enumerate(ivs)
+                  if iv[1] > iv[0] and i not in failed}
+    for nid in sorted(failed):
+        iv = ivs[nid]
+        if iv[1] <= iv[0]:
+            continue
+        # find a free alive slot
+        tgt = next(i for i in range(n_total)
+                   if i not in failed and i not in used_alive
+                   and ivs[i][1] <= ivs[i][0])
+        ivs[tgt] = iv
+        ivs[nid] = (old.m, old.m)
+        used_alive.add(tgt)
+    new = Assignment(old.m, tuple(ivs))
+    return _plan(old, new, s_eff)
+
+
+def restored_bytes(old: Assignment, failed: Set[int], s: np.ndarray) -> float:
+    """Checkpoint bytes that must be read back regardless of strategy."""
+    owner = old.owner_of()
+    s = np.asarray(s, dtype=np.float64)
+    return float(sum(s[owner == nid].sum() for nid in failed))
+
+
+# ---------------------------------------------------------------------------
+# Stragglers
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SpeedTracker:
+    """EWMA per-node step times -> relative speeds + straggler detection."""
+
+    n_nodes: int
+    alpha: float = 0.3
+    threshold: float = 1.5          # straggler: slower than 1.5× median
+
+    def __post_init__(self):
+        self.ewma = np.zeros(self.n_nodes)
+
+    def update(self, step_times: Sequence[float]) -> None:
+        t = np.asarray(step_times, dtype=np.float64)
+        self.ewma = np.where(self.ewma == 0, t,
+                             self.alpha * t + (1 - self.alpha) * self.ewma)
+
+    def speeds(self) -> np.ndarray:
+        t = np.where(self.ewma <= 0, np.median(self.ewma[self.ewma > 0])
+                     if (self.ewma > 0).any() else 1.0, self.ewma)
+        return (1.0 / t) / (1.0 / t).max()
+
+    def stragglers(self) -> List[int]:
+        med = np.median(self.ewma[self.ewma > 0]) if (self.ewma > 0).any() \
+            else 0.0
+        return [i for i, t in enumerate(self.ewma)
+                if med > 0 and t > self.threshold * med]
+
+
+def weighted_plan(old: Assignment, speeds: Sequence[float],
+                  w: np.ndarray, s: np.ndarray, tau: float,
+                  granularity: int = 4
+                  ) -> Tuple[MigrationPlan, List[List[int]]]:
+    """SSM with per-node speed weights via virtual slots.
+
+    Returns (plan over physical nodes, virtual→physical map used).  Virtual
+    slots belonging to one physical node receive disjoint intervals; the
+    physical node's load is their sum, ≤ (1+τ)·W·slots_i/Σslots ≈ the
+    weighted budget.  The plan's ``new`` assignment is over *virtual* slots;
+    callers project it with ``collapse_virtual``.
+    """
+    speeds = np.asarray(speeds, dtype=np.float64)
+    n = old.n_nodes
+    slots = np.maximum(1, np.round(speeds * granularity).astype(int))
+    # virtual old assignment: physical node i's interval is split evenly
+    # among its slots (zero-cost relabeling within a node: same machine)
+    v_ivs: List[Tuple[int, int]] = []
+    v_of: List[int] = []                     # virtual -> physical
+    for i, (lo, hi) in enumerate(old.intervals):
+        k = slots[i] if hi > lo else 1
+        if hi <= lo:
+            v_ivs.append((old.m, old.m))
+            v_of.append(i)
+            continue
+        cuts = np.linspace(lo, hi, k + 1).round().astype(int)
+        for j in range(k):
+            v_ivs.append((int(cuts[j]), int(cuts[j + 1])))
+            v_of.append(i)
+    v_old = Assignment(old.m, tuple(v_ivs))
+    v_plan = ssm(v_old, len(v_ivs), w, s, tau)
+    phys_map: List[List[int]] = [[] for _ in range(n)]
+    for v, p in enumerate(v_of):
+        phys_map[p].append(v)
+    return v_plan, phys_map
+
+
+def collapse_virtual(v_plan: MigrationPlan, v_of: Sequence[int],
+                     n_physical: int, s: np.ndarray,
+                     old_physical: Assignment) -> Dict[int, List[Tuple[int, int]]]:
+    """Project a virtual-slot plan to physical ownership: node -> interval
+    list (possibly >1 contiguous runs)."""
+    out: Dict[int, List[Tuple[int, int]]] = {i: [] for i in range(n_physical)}
+    for v, iv in enumerate(v_plan.new.intervals):
+        if iv[1] > iv[0]:
+            p = v_of[v] if v < len(v_of) else v % n_physical
+            out[p].append(iv)
+    return out
+
+
+def physical_migration_cost(v_plan: MigrationPlan, v_of: Sequence[int],
+                            s: np.ndarray) -> float:
+    """Bytes crossing *physical* machine boundaries (virtual moves within a
+    node are free)."""
+    s = np.asarray(s, dtype=np.float64)
+    n_v = max(v_plan.old.n_nodes, v_plan.new.n_nodes)
+    old_o = v_plan.old.padded(n_v).owner_of()
+    new_o = v_plan.new.padded(n_v).owner_of()
+    vof = list(v_of) + [(-1)] * (n_v - len(v_of))
+    cost = 0.0
+    for j in range(v_plan.old.m):
+        po = vof[old_o[j]] if old_o[j] < len(vof) else -1
+        pn = vof[new_o[j]] if new_o[j] < len(vof) else -2
+        if po != pn:
+            cost += s[j]
+    return float(cost)

@@ -1,0 +1,229 @@
+"""Elastic stream serving: the live-migration system design (paper §5) as a
+deterministic fluid simulation + the word-count quickstart app.
+
+The simulator reproduces the paper's Fig. 8/11 methodology: items arrive per
+interval per bucket, nodes drain their buckets' queues at fixed capacity,
+and migrations make "to move in" buckets unavailable at the destination
+until their phase lands.  Three migration designs are modeled:
+
+* kill_restart — Storm default (paper §5 intro): the whole app stops for the
+                 full state transfer + restart overhead.
+* live         — §5.2: to-stay buckets never stop; move-in buckets queue
+                 until their phase completes; tuples routed with a stale
+                 table are forwarded (+1 hop latency).
+* progressive  — §5.2 last ¶: mini-migrations bound simultaneously-suspended
+                 buckets, trading total duration for smaller latency spikes.
+
+The same ElasticOperator drives the real word-count application in
+examples/quickstart.py (numpy counters as operator state).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import Assignment, ElasticPlanner, MigrationPlan
+from .migration import (
+    MigrationExecutor, Move, move_list, naive_duration, phase_duration,
+    schedule_phases,
+)
+
+
+@dataclass
+class SimConfig:
+    interval_s: float = 60.0         # paper: 1 interval = 1 hour; scaled
+    slots_per_interval: int = 60
+    headroom: float = 1.15           # capacity = headroom · (1+τ)·rate/n
+    bw_bytes_per_s: float = 200e6
+    restart_overhead_s: float = 20.0  # JVM/process restart (paper §5.1)
+    forward_hop_s: float = 0.002
+    service_s: float = 0.001
+
+
+@dataclass
+class IntervalMetrics:
+    t: int
+    n_nodes: int
+    migration_cost_bytes: float = 0.0
+    migration_duration_s: float = 0.0
+    mean_response_s: float = 0.0
+    max_response_s: float = 0.0
+    forwarded: int = 0
+    dropped_capacity: float = 0.0
+
+
+class ElasticServingSim:
+    """Fluid simulation of one operator under an elastic node trace."""
+
+    def __init__(self, m: int, sim: SimConfig, planner: ElasticPlanner,
+                 mode: str = "live", max_inflight: int = 4,
+                 tau: float = 0.4):
+        self.m = m
+        self.sim = sim
+        self.planner = planner
+        self.mode = mode
+        self.max_inflight = max_inflight
+        self.tau = tau
+
+    def run(self, w: np.ndarray, s: np.ndarray, node_trace: Sequence[int]
+            ) -> List[IntervalMetrics]:
+        from repro.core import satisfies_balance
+
+        T, m = w.shape
+        assert m == self.m
+        cuts = np.linspace(0, m, node_trace[0] + 1).round().astype(int)
+        assign = Assignment.from_boundaries(m, list(cuts))
+        out: List[IntervalMetrics] = []
+        queues = np.zeros(m)                       # per-bucket backlog items
+        for t in range(T):
+            n_t = int(node_trace[t])
+            met = IntervalMetrics(t=t, n_nodes=n_t)
+            unavailable_until = np.zeros(m)        # per-bucket, seconds
+            freeze_until = 0.0
+            n_cur = sum(1 for lo, hi in assign.intervals if hi > lo)
+            # migrate on scale events AND on load-skew violations (the
+            # paper's rebalancing trigger, §1/§2.1)
+            if n_t != n_cur or not satisfies_balance(
+                    assign, w[t], n_t, self.tau):
+                plan = self.planner.plan(assign, n_t, w[t], s[t],
+                                         tau=self.tau)
+                moves = move_list(plan, s[t])
+                met.migration_cost_bytes = plan.cost
+                if self.mode == "kill_restart":
+                    dur = naive_duration(moves, self.sim.bw_bytes_per_s) + \
+                        self.sim.restart_overhead_s
+                    freeze_until = dur
+                    met.migration_duration_s = dur
+                else:
+                    budget = None
+                    if self.mode == "progressive":
+                        mx = s[t].max() if len(s[t]) else 1.0
+                        budget = self.max_inflight * mx
+                    phases = schedule_phases(moves, phase_budget=budget)
+                    clock = 0.0
+                    for ph in phases:
+                        dur = phase_duration(ph, self.sim.bw_bytes_per_s)
+                        for mv in ph:
+                            unavailable_until[mv.bucket] = clock + dur
+                        clock += dur
+                    met.migration_duration_s = clock
+                    met.forwarded = int(
+                        (w[t] / self.sim.interval_s
+                         * np.minimum(unavailable_until,
+                                      self.sim.interval_s)).sum())
+                assign = plan.new
+            out.append(self._drain(t, w[t], assign, queues,
+                                   unavailable_until, freeze_until, met))
+        return out
+
+    def _drain(self, t, w_t, assign, queues, unavailable_until, freeze_until,
+               met: IntervalMetrics) -> IntervalMetrics:
+        sim = self.sim
+        K = sim.slots_per_interval
+        dt = sim.interval_s / K
+        owner = assign.padded(max(assign.n_nodes, 1)).owner_of()
+        n_active = max(sum(1 for lo, hi in assign.intervals if hi > lo), 1)
+        # per-node capacity provisioned to the balance cap (Def. 2.1):
+        # headroom · (1+τ) · rate / n — a τ-balanced assignment never
+        # saturates a node in steady state.
+        total_rate = max(w_t.sum() / sim.interval_s, 1e-9)
+        cap_node = sim.headroom * (1 + self.tau) * total_rate / n_active
+        arr_rate = w_t / sim.interval_s
+        lat_num = 0.0
+        lat_den = 0.0
+        max_lat = 0.0
+        for k in range(K):
+            now = k * dt
+            avail = (now >= unavailable_until) & (now >= freeze_until)
+            queues += arr_rate * dt
+            # each node drains its available buckets proportionally
+            for i in range(len(assign.intervals)):
+                lo, hi = assign.intervals[i]
+                if hi <= lo:
+                    continue
+                idx = np.arange(lo, hi)
+                a = idx[avail[lo:hi]]
+                if len(a) == 0:
+                    continue
+                budget = cap_node * dt
+                q = queues[a]
+                drained = np.minimum(q, budget * q / max(q.sum(), 1e-12))
+                queues[a] = q - drained
+                served = drained.sum()
+                # waiting time ≈ queue/service rate at this instant
+                if served > 0:
+                    wait = q.sum() / cap_node
+                    lat_num += served * (wait + sim.service_s)
+                    lat_den += served
+                    max_lat = max(max_lat, wait + sim.service_s)
+        met.mean_response_s = lat_num / max(lat_den, 1e-12)
+        met.max_response_s = max_lat
+        met.dropped_capacity = float(queues.sum())
+        return met
+
+
+# ---------------------------------------------------------------------------
+# Word-count quickstart operator (real state, numpy counters)
+# ---------------------------------------------------------------------------
+
+class ElasticWordCount:
+    """The paper's running example with real bucketed counters."""
+
+    def __init__(self, m: int = 64, vocab: int = 10_000,
+                 planner: Optional[ElasticPlanner] = None,
+                 executor: Optional[MigrationExecutor] = None,
+                 n_nodes: int = 2):
+        from .state import BucketedState, route
+        self.m, self.vocab = m, vocab
+        self.route = lambda words: route(words, m)
+        self.state = BucketedState(
+            [{"counts": np.zeros(0, np.int64),
+              "keys": np.zeros(0, np.int64)} for _ in range(m)])
+        cuts = np.linspace(0, m, n_nodes + 1).round().astype(int)
+        self.assign = Assignment.from_boundaries(m, list(cuts))
+        self.placement = self.assign.owner_of()
+        if planner is None:
+            from repro.core import TauSchedule
+            # tighter τ when growing so added nodes actually take load (§2.1)
+            planner = ElasticPlanner(policy="ssm",
+                                     tau=TauSchedule(base=1.2, grow=0.2))
+        self.planner = planner
+        self.executor = executor or MigrationExecutor(mode="live")
+        self.work = np.zeros(m)
+
+    def ingest(self, words: np.ndarray) -> None:
+        buckets = self.route(words)
+        for j in np.unique(buckets):
+            ws = words[buckets == j]
+            b = self.state.buckets[j]
+            keys = np.concatenate([b["keys"], ws])
+            uniq, counts = np.unique(keys, return_counts=True)
+            # merge counts properly: counts of existing keys + new
+            prev = dict(zip(b["keys"].tolist(), b["counts"].tolist()))
+            new_counts = np.array(
+                [prev.get(int(k), 0) for k in uniq], np.int64)
+            add = np.zeros_like(new_counts)
+            u2, c2 = np.unique(ws, return_counts=True)
+            pos = np.searchsorted(uniq, u2)
+            add[pos] = c2
+            self.state.buckets[j] = {"counts": new_counts + add,
+                                     "keys": uniq}
+            self.work[j] += len(ws)
+
+    def totals(self) -> Dict[int, int]:
+        out: Dict[int, int] = {}
+        for b in self.state.buckets:
+            for k, c in zip(b["keys"], b["counts"]):
+                out[int(k)] = out.get(int(k), 0) + int(c)
+        return out
+
+    def scale(self, n_new: int, tau: Optional[float] = None):
+        s = self.state.bucket_bytes()
+        w = self.work + 1e-9
+        plan = self.planner.plan(self.assign, n_new, w, s, tau)
+        report = self.executor.execute(plan, self.state, self.placement)
+        self.assign = plan.new
+        self.work *= 0.5                       # decay the load estimate
+        return plan, report

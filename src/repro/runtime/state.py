@@ -1,0 +1,87 @@
+"""Bucketed operator state (paper §2: tasks and their states).
+
+The unit of migration is a *bucket* (the paper's task): a pytree whose
+leaves all share a leading bucket axis of size m.  Concrete operator states
+in this framework:
+
+* serving: per-bucket KV/recurrent state of the requests hashed there
+* streaming quickstart: per-bucket aggregation counters (word counts)
+* training: per-bucket optimizer-state slices (ZeRO resharding on elastic
+  events)
+
+``bucket_bytes`` drives the planner's |s_j|; ``route`` is the paper's
+partitioning function f(r) (cheap hash → bucket id); nodes own contiguous
+bucket intervals so the routing table is just the interval boundaries
+(paper §2.1's CPU-cache argument → here a tiny (n+1,) int array).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+try:  # jax is optional at this layer: the sim backend is pure numpy
+    import jax
+    import jax.numpy as jnp
+except Exception:  # pragma: no cover
+    jax = None
+    jnp = None
+
+
+@dataclass
+class BucketedState:
+    """Host-side view: per-bucket pytrees (list of length m)."""
+
+    buckets: List[Any]                   # bucket id -> pytree (numpy leaves)
+
+    @property
+    def m(self) -> int:
+        return len(self.buckets)
+
+    def bucket_bytes(self) -> np.ndarray:
+        out = np.zeros(self.m)
+        for j, b in enumerate(self.buckets):
+            leaves = _tree_leaves(b)
+            out[j] = float(sum(x.size * x.itemsize for x in leaves))
+        return out
+
+    @staticmethod
+    def zeros_like_spec(m: int, spec: Dict[str, tuple],
+                        dtype=np.float32) -> "BucketedState":
+        return BucketedState(
+            [{k: np.zeros(shape, dtype) for k, shape in spec.items()}
+             for _ in range(m)])
+
+
+def _tree_leaves(tree) -> List[np.ndarray]:
+    if isinstance(tree, dict):
+        out: List[np.ndarray] = []
+        for v in tree.values():
+            out.extend(_tree_leaves(v))
+        return out
+    if isinstance(tree, (list, tuple)):
+        out = []
+        for v in tree:
+            out.extend(_tree_leaves(v))
+        return out
+    return [np.asarray(tree)]
+
+
+def route(keys: np.ndarray, m: int, seed: int = 0) -> np.ndarray:
+    """Partitioning function f(r): stable integer hash -> [0, m)."""
+    k = np.asarray(keys, dtype=np.uint64)
+    s = np.uint64(seed * 0x9E3779B97F4A7C15 + 0xBF58476D1CE4E5B9)
+    x = (k + s) * np.uint64(0x94D049BB133111EB)
+    x ^= x >> np.uint64(29)
+    x *= np.uint64(0xBF58476D1CE4E5B9)
+    x ^= x >> np.uint64(32)
+    return (x % np.uint64(m)).astype(np.int64)
+
+
+def owner_lookup(boundaries: Sequence[int], bucket_ids: np.ndarray
+                 ) -> np.ndarray:
+    """Interval routing: node = searchsorted(boundaries, bucket) — the whole
+    routing table is the boundary array (paper §2.1)."""
+    b = np.asarray(boundaries)
+    return np.searchsorted(b, np.asarray(bucket_ids), side="right") - 1

@@ -1,0 +1,166 @@
+"""Unit + property tests for interval/assignment primitives (paper §2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Assignment,
+    balance_cap,
+    migration_cost,
+    migration_gain,
+    moved_tasks,
+    prefix_sum,
+    satisfies_balance,
+)
+from repro.core.intervals import (
+    count_balanced_partitions,
+    enumerate_balanced_partitions,
+    greedy_boundaries,
+    match_gain,
+    min_cover_counts,
+    next_jump,
+    realize_partition,
+)
+
+
+def rand_assignment(rng, m, n):
+    cuts = np.sort(rng.choice(np.arange(1, m), size=n - 1, replace=False))
+    return Assignment.from_boundaries(m, [0, *cuts.tolist(), m])
+
+
+def test_prefix_and_measure():
+    S = prefix_sum(np.array([1.0, 2.0, 3.0]))
+    assert S.tolist() == [0, 1, 3, 6]
+
+
+def test_assignment_validate_and_owner():
+    a = Assignment.from_boundaries(10, [0, 4, 10])
+    a.validate()
+    assert a.owner_of().tolist() == [0] * 4 + [1] * 6
+    with pytest.raises(ValueError):
+        Assignment(10, ((0, 4), (5, 10))).validate()  # gap at 4
+
+
+def test_gain_cost_complementary():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        m = int(rng.integers(4, 30))
+        n1 = int(rng.integers(1, min(m, 6) + 1))
+        n2 = int(rng.integers(1, min(m, 6) + 1))
+        old = rand_assignment(rng, m, n1) if n1 > 1 else Assignment(m, ((0, m),))
+        new = rand_assignment(rng, m, n2) if n2 > 1 else Assignment(m, ((0, m),))
+        s = rng.uniform(0.1, 5.0, m)
+        assert migration_gain(old, new, s) + migration_cost(old, new, s) == (
+            pytest.approx(s.sum())
+        )
+        # cost == sum of state over tasks whose owner changed
+        mask = moved_tasks(old, new)
+        assert migration_cost(old, new, s) == pytest.approx(s[mask].sum())
+
+
+def test_identity_migration_zero_cost():
+    a = Assignment.from_boundaries(12, [0, 5, 9, 12])
+    s = np.arange(1.0, 13.0)
+    assert migration_cost(a, a, s) == 0.0
+
+
+@given(
+    m=st.integers(3, 16),
+    seed=st.integers(0, 10_000),
+    cap_mult=st.floats(1.05, 3.0),
+)
+@settings(max_examples=100, deadline=None)
+def test_next_jump_and_cover(m, seed, cap_mult):
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.5, 2.0, m)
+    cap = w.max() * cap_mult
+    nxt = next_jump(w, cap)
+    # every jump is maximal and feasible
+    for a in range(m):
+        b = int(nxt[a])
+        assert w[a:b].sum() <= cap * (1 + 1e-9) + 1e-9
+        if b < m:
+            assert w[a : b + 1].sum() > cap
+    cnt = min_cover_counts(nxt)
+    bs = greedy_boundaries(nxt, 0, m)
+    assert len(bs) - 1 == cnt[0]
+    # greedy cover is minimal: any cover with fewer intervals is infeasible
+    for k in range(1, int(cnt[0])):
+        assert count_balanced_partitions(w, k, cap * k / w.sum() - 1) == 0
+
+
+@given(m=st.integers(4, 12), k=st.integers(1, 5), seed=st.integers(0, 1000))
+@settings(max_examples=60, deadline=None)
+def test_enumerate_matches_count(m, k, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.5, 2.0, m)
+    tau = float(rng.uniform(0.0, 1.5))
+    parts = list(enumerate_balanced_partitions(w, k, tau))
+    assert len(parts) == count_balanced_partitions(w, k, tau)
+    for p in parts:
+        assert satisfies_balance(p, w, k, tau)
+        assert len(p) == k + 1 and p[0] == 0 and p[-1] == m
+        assert all(p[i] < p[i + 1] for i in range(k))
+
+
+def brute_match(old_items, new_bounds, Ss):
+    """Exhaustive max bipartite matching gain (crossing allowed).
+
+    Recursion over new intervals; each is either unmatched or matched to an
+    unused old node (injective both ways)."""
+    k = len(new_bounds) - 1
+    n = len(old_items)
+
+    def ov(i, j):
+        lo = max(old_items[i][1][0], new_bounds[j])
+        hi = min(old_items[i][1][1], new_bounds[j + 1])
+        return float(Ss[hi] - Ss[lo]) if hi > lo else 0.0
+
+    def rec(j, used):
+        if j == k:
+            return 0.0
+        best = rec(j + 1, used)  # leave new interval j unmatched
+        for i in range(n):
+            if not used & (1 << i):
+                best = max(best, ov(i, j) + rec(j + 1, used | (1 << i)))
+        return best
+
+    return rec(0, 0)
+
+
+@given(m=st.integers(3, 10), n=st.integers(1, 4), k=st.integers(1, 4),
+       seed=st.integers(0, 5000))
+@settings(max_examples=80, deadline=None)
+def test_match_gain_equals_bruteforce(m, n, k, seed):
+    """The non-crossing LCS DP equals unconstrained bipartite matching."""
+    rng = np.random.default_rng(seed)
+    n = min(n, m)
+    k = min(k, m)
+    old = rand_assignment(rng, m, n) if n > 1 else Assignment(m, ((0, m),))
+    cuts = np.sort(rng.choice(np.arange(1, m), size=k - 1, replace=False))
+    nb = [0, *cuts.tolist(), m]
+    s = rng.uniform(0.1, 3.0, m)
+    Ss = prefix_sum(s)
+    g_dp, pairs = match_gain(old.nonempty(), nb, Ss)
+    g_bf = brute_match(old.nonempty(), nb, Ss)
+    assert g_dp == pytest.approx(g_bf)
+    # matching is injective both ways
+    assert len({p[0] for p in pairs}) == len(pairs)
+    assert len({p[1] for p in pairs}) == len(pairs)
+
+
+@given(m=st.integers(4, 12), n=st.integers(2, 4), k=st.integers(2, 4),
+       seed=st.integers(0, 5000))
+@settings(max_examples=60, deadline=None)
+def test_realize_partition_achieves_match_gain(m, n, k, seed):
+    rng = np.random.default_rng(seed)
+    n, k = min(n, m - 1), min(k, m - 1)
+    old = rand_assignment(rng, m, n)
+    cuts = np.sort(rng.choice(np.arange(1, m), size=k - 1, replace=False))
+    nb = [0, *cuts.tolist(), m]
+    s = rng.uniform(0.1, 3.0, m)
+    Ss = prefix_sum(s)
+    g, _ = match_gain(old.nonempty(), nb, Ss)
+    new = realize_partition(old, nb, s, k)
+    new.validate()
+    assert migration_gain(old, new, s) == pytest.approx(g)

@@ -1,0 +1,189 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracle,
+swept over shapes and dtypes (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import ref as kref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.interval_gain import interval_gain_pallas
+from repro.kernels.mamba_scan import mamba_scan_pallas
+from repro.kernels.rglru_scan import rglru_scan_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,Hkv,S,hd", [
+    (1, 2, 2, 128, 32), (2, 4, 2, 256, 64), (1, 8, 1, 256, 128),
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64),
+                                           (False, 0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, H, Hkv, S, hd, causal, window, dtype):
+    q = jax.random.normal(KEY, (B, H, S, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, Hkv, S, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, Hkv, S, hd), dtype)
+    o = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                               q_block=64, kv_block=64, interpret=True)
+    r = kref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(r, np.float32), **tol(dtype))
+
+
+def test_flash_attention_uneven_blocks():
+    q = jax.random.normal(KEY, (1, 2, 192, 32))
+    k = jax.random.normal(KEY, (1, 2, 192, 32))
+    v = jax.random.normal(KEY, (1, 2, 192, 32))
+    o = flash_attention_pallas(q, k, v, q_block=64, kv_block=96,
+                               interpret=True)
+    r = kref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), rtol=2e-3,
+                               atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,Hkv,S,hd", [
+    (2, 4, 2, 256, 64), (1, 8, 8, 512, 32), (3, 4, 1, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, H, Hkv, S, hd, dtype):
+    q = jax.random.normal(KEY, (B, H, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 3), (B, Hkv, S, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 4), (B, Hkv, S, hd), dtype)
+    # ring-buffer style positions with invalid tail
+    rng = np.random.default_rng(0)
+    fill = rng.integers(S // 4, S, B)
+    kv_pos = np.full((B, S), -1, np.int32)
+    for b in range(B):
+        kv_pos[b, : fill[b]] = np.arange(fill[b])
+    q_pos = jnp.asarray(fill - 1, jnp.int32)
+    kv_pos = jnp.asarray(kv_pos)
+    o = decode_attention_pallas(q, k, v, q_pos, kv_pos, s_block=64,
+                                interpret=True)
+    r = kref.decode_attention_ref(q, k, v, q_pos, kv_pos)
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(r, np.float32), **tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# rglru / mamba scans
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,D", [(2, 128, 64), (1, 256, 256), (4, 64, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_scan(B, S, D, dtype):
+    a = jax.nn.sigmoid(jax.random.normal(KEY, (B, S, D))).astype(dtype)
+    b = (jax.random.normal(jax.random.fold_in(KEY, 5), (B, S, D)) * 0.1
+         ).astype(dtype)
+    h0 = jax.random.normal(jax.random.fold_in(KEY, 6), (B, D))
+    h = rglru_scan_pallas(a, b, h0, s_block=64, d_block=32, interpret=True)
+    r = kref.rglru_scan_ref(a, b, h0)
+    np.testing.assert_allclose(
+        np.asarray(h, np.float32), np.asarray(r, np.float32),
+        rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4,
+        atol=3e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+@pytest.mark.parametrize("B,S,D,N", [(2, 64, 32, 8), (1, 128, 64, 16)])
+def test_mamba_scan(B, S, D, N):
+    a = jax.nn.sigmoid(jax.random.normal(KEY, (B, S, D, N)))
+    b = jax.random.normal(jax.random.fold_in(KEY, 7), (B, S, D, N)) * 0.1
+    c = jax.random.normal(jax.random.fold_in(KEY, 8), (B, S, N))
+    h0 = jax.random.normal(jax.random.fold_in(KEY, 9), (B, D, N))
+    y, h_last = mamba_scan_pallas(a, b, c, h0, s_block=32, d_block=16,
+                                  interpret=True)
+    yr, hr = kref.mamba_scan_ref(a, b, c, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(hr),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_scan_kernels_match_model_layers():
+    """The kernels compute exactly what the model blocks use."""
+    from repro.models.recurrence import linear_scan
+    a = jax.nn.sigmoid(jax.random.normal(KEY, (2, 128, 48)))
+    b = jax.random.normal(KEY, (2, 128, 48))
+    h0 = jnp.zeros((2, 48))
+    h_model, h_fin = linear_scan(a, b, h0)
+    h_kernel = rglru_scan_pallas(a, b, h0, s_block=32, d_block=48,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(h_model), np.asarray(h_kernel),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_fin),
+                               np.asarray(h_kernel[:, -1]), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# interval gain (the paper's PMC hot loop)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("Qa,Qb,Ka,Kb", [
+    (5, 7, 3, 4), (16, 16, 5, 5), (3, 130, 2, 6),
+])
+def test_interval_gain_vs_numpy_reference(Qa, Qb, Ka, Kb):
+    """Kernel == jnp ref == core.mtm.pairwise_gain_matrix (numpy)."""
+    from repro.core import prefix_sum
+    from repro.core.mtm import pairwise_gain_matrix
+    rng = np.random.default_rng(0)
+    m = 24
+    s = rng.uniform(0.1, 3.0, m)
+    Ss = prefix_sum(s)
+
+    def rand_bounds(Q, K):
+        out = np.zeros((Q, K + 1), np.int64)
+        for q in range(Q):
+            cuts = np.sort(rng.choice(np.arange(1, m), K - 1, replace=False))
+            out[q] = [0, *cuts.tolist(), m]
+        return out
+
+    a = rand_bounds(Qa, Ka)
+    b = rand_bounds(Qb, Kb)
+    want = pairwise_gain_matrix(a, b, Ss)
+    a_lo, a_hi = Ss[a[:, :-1]].astype(np.float32), Ss[a[:, 1:]].astype(
+        np.float32)
+    b_lo, b_hi = Ss[b[:, :-1]].astype(np.float32), Ss[b[:, 1:]].astype(
+        np.float32)
+    got_ref = kref.interval_gain_ref(jnp.asarray(a_lo), jnp.asarray(a_hi),
+                                     jnp.asarray(b_lo), jnp.asarray(b_hi))
+    np.testing.assert_allclose(np.asarray(got_ref), want, rtol=1e-5,
+                               atol=1e-5)
+    got_k = interval_gain_pallas(jnp.asarray(a_lo), jnp.asarray(a_hi),
+                                 jnp.asarray(b_lo), jnp.asarray(b_hi),
+                                 tile_a=4, tile_b=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_k), want, rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_pairwise_gain_op_plugs_into_pmc():
+    """ops.pairwise_gain is a drop-in gain_fn for core.mtm.pmc."""
+    from repro.core import MTM, PartitionTable, pmc, prefix_sum
+    rng = np.random.default_rng(1)
+    m = 12
+    w = rng.uniform(0.5, 2.0, m)
+    s = rng.uniform(0.1, 3.0, m)
+    table = PartitionTable.build(w, 2, 4, tau=0.8)
+    mtm = MTM.uniform(2, 4)
+    base = pmc(table, s, mtm, gamma=0.7)
+    fast = pmc(table, s, mtm, gamma=0.7,
+               gain_fn=lambda a, b, Ss: ops.pairwise_gain(
+                   a, b, Ss, use_pallas=True, interpret=True))
+    np.testing.assert_allclose(fast.values, base.values, rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(fast.cost, base.cost, rtol=1e-4, atol=1e-4)

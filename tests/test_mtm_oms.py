@@ -1,0 +1,162 @@
+"""MTM-aware migration (paper §4) correctness tests: the MDP's up-to-k
+partition space, value-iteration convergence, and the headline claim —
+MTM total cost ≤ greedy single-step total cost over chain-sampled traces."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Assignment, MTM, PartitionTable, mtm_aware_plan, oms, pmc,
+    satisfies_balance, ssm, greedy_sequence,
+)
+
+
+def chain_trace(probs, n_lo, start, length, seed):
+    rng = np.random.default_rng(seed)
+    trace = [start]
+    ns = np.arange(n_lo, n_lo + probs.shape[0])
+    for _ in range(length):
+        trace.append(int(rng.choice(ns, p=probs[trace[-1] - n_lo])))
+    return trace
+
+
+def run_trace(policy, trace, m, w, s, tau, pmc_res=None):
+    cuts = np.linspace(0, m, trace[0] + 1).round().astype(int)
+    a = Assignment.from_boundaries(m, list(cuts))
+    total = 0.0
+    for n_new in trace[1:]:
+        n_cur = sum(1 for lo, hi in a.intervals if hi > lo)
+        if n_new == n_cur:
+            continue
+        plan = (ssm(a, n_new, w, s, tau) if policy == "ssm"
+                else mtm_aware_plan(a, n_new, s, pmc_res))
+        # every policy must satisfy the balance requirement
+        assert satisfies_balance(plan.new, w, n_new, tau)
+        total += plan.cost
+        a = plan.new
+    return total
+
+
+def test_table_covers_up_to_k():
+    """Partitions with j < k intervals must be feasible targets for k nodes
+    when they fit the k-cap (the paper's 'up to n_max intervals')."""
+    rng = np.random.default_rng(1)
+    m = 10
+    w = rng.uniform(0.5, 1.5, m)
+    table = PartitionTable.build(w, 2, 5, tau=1.2)
+    counts = np.asarray(table.n_counts)
+    rows5 = table.feasible_rows(5)
+    assert (counts[rows5] < 5).any(), "low-count rows must serve k=5"
+    # every feasible row satisfies the k-cap
+    from repro.core import balance_cap
+    cap = balance_cap(w.sum(), 5, 1.2)
+    assert (table.max_load[rows5] <= cap * (1 + 1e-9) + 1e-9).all()
+
+
+def test_mtm_beats_greedy_on_chain_traces():
+    rng = np.random.default_rng(0)
+    m = 12
+    w = rng.uniform(0.5, 2.0, m)
+    s = rng.uniform(0.5, 2.0, m)
+    tau = 0.8
+    probs = np.array([[0.2, 0.5, 0.2, 0.1], [0.3, 0.2, 0.4, 0.1],
+                      [0.1, 0.4, 0.2, 0.3], [0.1, 0.2, 0.5, 0.2]])
+    mtm = MTM(3, 6, probs)
+    table = PartitionTable.build(w, 3, 6, tau)
+    res = pmc(table, s, mtm, gamma=0.9)
+    wins = 0
+    for seed in range(3):
+        trace = chain_trace(probs, 3, 4, 150, seed)
+        c_ssm = run_trace("ssm", trace, m, w, s, tau)
+        c_mtm = run_trace("mtm", trace, m, w, s, tau, res)
+        wins += c_mtm <= c_ssm * 1.02
+    assert wins >= 2, "MTM should beat greedy on most chain traces"
+
+
+def test_gamma_zero_matches_single_step_cost():
+    """γ=0 reduces MTM to optimal single-step (Def. 2.8): per-migration cost
+    equals SSM's optimum."""
+    rng = np.random.default_rng(2)
+    m = 10
+    w = rng.uniform(0.5, 2.0, m)
+    s = rng.uniform(0.5, 2.0, m)
+    tau = 1.0
+    mtm = MTM.uniform(2, 5)
+    table = PartitionTable.build(w, 2, 5, tau)
+    res = pmc(table, s, mtm, gamma=0.0)
+    a = Assignment.from_boundaries(m, [0, 5, 10])
+    for n_new in (3, 4, 5, 2):
+        p_mtm = mtm_aware_plan(a, n_new, s, res)
+        p_ssm = ssm(a, n_new, w, s, tau)
+        assert p_mtm.cost == pytest.approx(p_ssm.cost, abs=1e-9)
+        a = p_ssm.new
+
+
+def test_pmc_values_monotone_in_gamma():
+    rng = np.random.default_rng(3)
+    m = 8
+    w = rng.uniform(0.5, 1.5, m)
+    s = rng.uniform(0.5, 1.5, m)
+    mtm = MTM.uniform(2, 4)
+    table = PartitionTable.build(w, 2, 4, tau=1.0)
+    prev = None
+    for gamma in (0.0, 0.5, 0.9):
+        res = pmc(table, s, mtm, gamma=gamma)
+        v = res.values.mean()
+        if prev is not None:
+            assert v >= prev - 1e-9   # longer horizon ⇒ larger values
+        prev = v
+
+
+def test_oms_not_worse_than_greedy_chain():
+    rng = np.random.default_rng(4)
+    m = 10
+    w = np.ones(m)
+    s = rng.uniform(0.5, 2.0, m)
+    a = Assignment.from_boundaries(m, [0, 6, 10])
+    targets = [(3, 0.6), (4, 0.6), (2, 0.6)]
+    o = oms(a, targets, w, s)
+    g = greedy_sequence(a, targets, w, s)
+    assert o.total_cost <= g.total_cost + 1e-9
+    # each step satisfies its balance constraint
+    for plan, (n_i, tau_i) in zip(o.plans, targets):
+        assert satisfies_balance(plan.new, w, n_i, tau_i)
+
+
+def brute_sequence_cost(old, targets, w, s):
+    """Exhaustive 2-step optimum: min over all (P1, P2) partition pairs of
+    matching-cost(old→P1) + matching-cost(P1→P2)."""
+    from repro.core.intervals import (
+        enumerate_balanced_partitions, match_gain, prefix_sum,
+    )
+    from repro.core.oms import partition_items
+    Ss = prefix_sum(s)
+    total = float(Ss[-1])
+    (n1, t1), (n2, t2) = targets
+    best = np.inf
+    p1s = list(enumerate_balanced_partitions(w, n1, t1))
+    p2s = list(enumerate_balanced_partitions(w, n2, t2))
+    for b1 in p1s:
+        c1 = total - match_gain(old.nonempty(), list(b1), Ss)[0]
+        for b2 in p2s:
+            c2 = total - match_gain(partition_items(b1), list(b2), Ss)[0]
+            if c1 + c2 < best:
+                best = c1 + c2
+    return best
+
+
+@given(m=st.integers(5, 9), seed=st.integers(0, 300))
+@settings(max_examples=15, deadline=None)
+def test_oms_equals_bruteforce_two_step(m, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.5, 1.5, m)
+    s = rng.uniform(0.5, 2.0, m)
+    cut = int(rng.integers(1, m))
+    a = Assignment.from_boundaries(m, [0, cut, m])
+    targets = [(3, 0.8), (2, 0.8)]
+    try:
+        o = oms(a, targets, w, s)
+    except Exception:
+        return
+    bf = brute_sequence_cost(a, targets, w, s)
+    assert o.total_cost == pytest.approx(bf, rel=1e-9, abs=1e-9)

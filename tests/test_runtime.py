@@ -1,0 +1,290 @@
+"""Elastic runtime tests: migration executor, phases, checkpoint-restore,
+failure recovery, stragglers, live serving, word-count correctness."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Assignment, ElasticPlanner, migration_cost, ssm
+from repro.runtime import (
+    BucketedState, CheckpointManager, ElasticController, ElasticServingSim,
+    ElasticWordCount, MigrationExecutor, SimBackend, SimConfig, SpeedTracker,
+    move_list, naive_duration, phase_duration, physical_migration_cost,
+    plan_to_permutation, recovery_plan, restored_bytes, route,
+    schedule_phases, weighted_plan,
+)
+from repro.runtime.state import owner_lookup
+
+
+def mk_state(m, nbytes_per_bucket=None, seed=0):
+    rng = np.random.default_rng(seed)
+    sizes = (nbytes_per_bucket if nbytes_per_bucket is not None
+             else rng.integers(64, 4096, m))
+    return BucketedState(
+        [{"x": np.zeros(int(sz) // 8, np.float64)} for sz in sizes])
+
+
+# ---------------------------------------------------------------------------
+# Phase scheduling (Rödiger-style)
+# ---------------------------------------------------------------------------
+
+@given(m=st.integers(8, 48), n_old=st.integers(2, 6), n_new=st.integers(2, 8),
+       seed=st.integers(0, 999))
+@settings(max_examples=40, deadline=None)
+def test_phase_schedule_complete_and_balanced(m, n_old, n_new, seed):
+    rng = np.random.default_rng(seed)
+    cuts = np.sort(rng.choice(np.arange(1, m), n_old - 1, replace=False))
+    old = Assignment.from_boundaries(m, [0, *cuts.tolist(), m])
+    w = rng.uniform(0.5, 2.0, m)
+    s = rng.uniform(100, 10_000, m)
+    plan = ssm(old, n_new, w, s, 1.0)
+    moves = move_list(plan, s)
+    phases = schedule_phases(moves)
+    # every move scheduled exactly once
+    flat = [mv for ph in phases for mv in ph]
+    assert sorted(mv.bucket for mv in flat) == sorted(
+        mv.bucket for mv in moves)
+    # phase budget property: per-phase per-node traffic <= default budget
+    if moves:
+        endpoints = {mv.src for mv in moves} | {mv.dst for mv in moves}
+        budget = max(max(mv.nbytes for mv in moves),
+                     sum(mv.nbytes for mv in moves) / max(len(endpoints), 1))
+    else:
+        budget = 0
+    for ph in phases:
+        up, down = {}, {}
+        for mv in ph:
+            up[mv.src] = up.get(mv.src, 0) + mv.nbytes
+            down[mv.dst] = down.get(mv.dst, 0) + mv.nbytes
+        for v in list(up.values()) + list(down.values()):
+            assert v <= budget + 1e-9
+    # scheduled duration never exceeds the naive serial transfer
+    bw = 1e9
+    assert sum(phase_duration(p, bw) for p in phases) <= \
+        naive_duration(moves, bw) + 1e-12
+
+
+def test_executor_moves_placement_and_accounts_bytes():
+    m = 32
+    state = mk_state(m)
+    s = state.bucket_bytes()
+    old = Assignment.from_boundaries(m, [0, 16, 32])
+    plan = ssm(old, 4, np.ones(m), s, 0.5)
+    placement = old.owner_of().copy()
+    ex = MigrationExecutor(backend=SimBackend(bw_bytes_per_s=1e6),
+                           mode="live")
+    rep = ex.execute(plan, state, placement)
+    assert rep.bytes_moved == pytest.approx(plan.cost)
+    # placement now matches the new assignment
+    n_total = max(plan.old.n_nodes, plan.new.n_nodes)
+    np.testing.assert_array_equal(placement,
+                                  plan.new.padded(n_total).owner_of())
+    assert rep.duration_s > 0 and rep.phases >= 1
+
+
+def test_progressive_bounds_inflight():
+    m = 64
+    state = mk_state(m, nbytes_per_bucket=np.full(m, 1000))
+    s = state.bucket_bytes()
+    old = Assignment.from_boundaries(m, [0, 64])          # everything on N0
+    plan = ssm(old, 8, np.ones(m), s, 0.2)
+    placement = old.owner_of().copy()
+    ex = MigrationExecutor(backend=SimBackend(), mode="progressive",
+                           max_inflight=2)
+    rep = ex.execute(plan, state, placement)
+    assert rep.suspended_peak <= 2
+    ex2 = MigrationExecutor(backend=SimBackend(), mode="live")
+    rep2 = ex2.execute(plan, state, old.owner_of().copy())
+    # mini-migrations trade more phases for bounded suspension (paper §5.2)
+    assert rep.phases >= rep2.phases
+    assert rep2.suspended_peak >= rep.suspended_peak
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+
+def test_route_stable_and_uniform():
+    keys = np.arange(100_000)
+    b1, b2 = route(keys, 64), route(keys, 64)
+    np.testing.assert_array_equal(b1, b2)
+    counts = np.bincount(b1, minlength=64)
+    assert counts.min() > 0.7 * counts.mean()
+    assert counts.max() < 1.3 * counts.mean()
+
+
+def test_owner_lookup_matches_assignment():
+    a = Assignment.from_boundaries(16, [0, 5, 11, 16])
+    bounds = [iv[0] for iv in a.intervals] + [16]
+    ids = np.arange(16)
+    np.testing.assert_array_equal(owner_lookup(bounds[:-1] + [16], ids)
+                                  if False else
+                                  owner_lookup([0, 5, 11], ids), a.owner_of())
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint-restore with resharding
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_restore_reshards(tmp_path):
+    m = 24
+    state = mk_state(m, seed=3)
+    for j, b in enumerate(state.buckets):
+        b["x"][:] = j                                  # identifiable content
+    a = Assignment.from_boundaries(m, [0, 8, 16, 24])
+    cm = CheckpointManager(tmp_path, keep=2)
+    cm.save(10, state, a)
+    assert cm.latest() == 10
+    w = np.ones(m)
+    restored, new_assign, report, _ = cm.restore(10, 5, w, tau=0.5)
+    assert sum(1 for lo, hi in new_assign.intervals if hi > lo) == 5
+    # content preserved
+    for j in range(m):
+        assert float(restored.buckets[j]["x"][0]) == j
+    # resident + read == total
+    total = state.bucket_bytes().sum()
+    assert report.bytes_read + report.bytes_resident == pytest.approx(total)
+    # going 4 -> 5 nodes keeps most bytes resident (optimal restore)
+    assert report.bytes_resident > 0.5 * total
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    m = 8
+    state = mk_state(m)
+    a = Assignment.from_boundaries(m, [0, 4, 8])
+    cm = CheckpointManager(tmp_path, keep=2)
+    for step in (1, 2, 3):
+        cm.save(step, state, a, extra={"step": np.asarray(step)},
+                async_=True)
+    cm.wait()
+    assert cm.steps() == [2, 3]                        # keep=2 GC
+
+
+# ---------------------------------------------------------------------------
+# Failure recovery + stragglers
+# ---------------------------------------------------------------------------
+
+def test_recovery_keeps_survivor_state():
+    m = 32
+    rng = np.random.default_rng(0)
+    s = rng.uniform(100, 1000, m)
+    w = np.ones(m)
+    old = Assignment.from_boundaries(m, [0, 8, 16, 24, 32])
+    plan = recovery_plan(old, {1}, 3, w, s, tau=0.8)
+    # failed node 1 owns nothing afterwards
+    assert plan.new.intervals[1][1] <= plan.new.intervals[1][0]
+    # network cost counts only survivor-owned buckets that move
+    owner = old.owner_of()
+    survivor_bytes = s[owner != 1].sum()
+    assert plan.cost <= survivor_bytes
+    assert restored_bytes(old, {1}, s) == pytest.approx(s[owner == 1].sum())
+    # the balance requirement holds over the 3 surviving active nodes
+    loads = plan.new.node_loads(w)
+    cap = (1 + 0.8) * w.sum() / 3
+    assert (loads <= cap + 1e-9).all()
+
+
+def test_speed_tracker_and_weighted_plan():
+    st_ = SpeedTracker(4)
+    st_.update([1.0, 1.0, 1.0, 3.0])
+    st_.update([1.0, 1.1, 0.9, 3.2])
+    assert st_.stragglers() == [3]
+    speeds = st_.speeds()
+    assert speeds[3] < 0.5
+
+    m = 48
+    rng = np.random.default_rng(1)
+    w = rng.uniform(0.5, 2.0, m)
+    s = rng.uniform(100, 1000, m)
+    old = Assignment.from_boundaries(m, [0, 12, 24, 36, 48])
+    v_plan, phys_map = weighted_plan(old, speeds, w, s, tau=0.4)
+    # straggler's physical share shrinks below fair share
+    v_of = [p for p, vs in enumerate(phys_map) for _ in vs]
+    # reconstruct v_of in slot order
+    v_of = np.zeros(max(v for vs in phys_map for v in vs) + 1, int)
+    for p, vs in enumerate(phys_map):
+        for v in vs:
+            v_of[v] = p
+    loads = np.zeros(4)
+    Sw = np.concatenate([[0], np.cumsum(w)])
+    for v, iv in enumerate(v_plan.new.intervals):
+        if iv[1] > iv[0] and v < len(v_of):
+            loads[v_of[v]] += Sw[iv[1]] - Sw[iv[0]]
+    fair = w.sum() / 4
+    assert loads[3] < 0.8 * fair
+    # physical cost <= virtual-plan cost (intra-node moves are free)
+    assert physical_migration_cost(v_plan, list(v_of), s) <= v_plan.cost + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Controller + serving sim + wordcount
+# ---------------------------------------------------------------------------
+
+def test_controller_scale_rebalance_recover_history():
+    m = 32
+    state = mk_state(m)
+    ctl = ElasticController(m, 2, tau=0.8)
+    w = np.ones(m)
+    ctl.scale(4, w, state)
+    assert ctl.n_nodes == 4
+    w2 = np.ones(m)
+    w2[:4] = 20.0
+    assert ctl.balance_violated(w2)
+    ctl.maybe_rebalance(w2, state)
+    assert not ctl.balance_violated(w2)
+    ctl.recover({0}, w2, state)
+    assert ctl.n_nodes == 3
+    assert [e.kind for e in ctl.events] == ["scale", "rebalance", "recover"]
+    mtm = ctl.estimate_mtm(2, 4)
+    assert mtm.probs.shape == (3, 3)
+
+
+def test_live_beats_kill_restart():
+    """Fig. 11 shape: live migration's response time is orders of magnitude
+    below kill-restart during migration intervals."""
+    from repro.data import task_workloads, task_state_sizes, node_count_trace
+    m = 32
+    w = task_workloads(m, 30, seed=5)
+    s = task_state_sizes(w) * 2000          # sizeable state
+    trace = node_count_trace(w, 4, 8)
+    sim = SimConfig()
+    planner = ElasticPlanner(policy="ssm", tau=None) if False else \
+        ElasticPlanner(policy="ssm")
+    results = {}
+    for mode in ("kill_restart", "live", "progressive"):
+        sv = ElasticServingSim(m, sim, ElasticPlanner(policy="ssm"),
+                               mode=mode)
+        mets = sv.run(w, s, trace)
+        mig = [x for x in mets if x.migration_cost_bytes > 0]
+        results[mode] = np.mean([x.mean_response_s for x in mig])
+    assert results["live"] < 0.25 * results["kill_restart"]
+    assert results["progressive"] < results["kill_restart"]
+
+
+def test_wordcount_counts_survive_migration():
+    rng = np.random.default_rng(0)
+    app = ElasticWordCount(m=16, n_nodes=2)
+    words = rng.integers(0, 500, 5000)
+    app.ingest(words)
+    before = app.totals()
+    plan, rep = app.scale(5)
+    assert sum(1 for lo, hi in app.assign.intervals if hi > lo) == 5
+    after = app.totals()
+    assert before == after                    # no state lost in migration
+    truth = {int(k): int(c) for k, c in
+             zip(*np.unique(words, return_counts=True))}
+    assert after == truth
+    assert rep.bytes_moved < app.state.bucket_bytes().sum()  # partial move
+
+
+def test_migration_step_permutation():
+    m = 16
+    old = Assignment.from_boundaries(m, [0, 8, 16])
+    plan = ssm(old, 4, np.ones(m), np.ones(m), 0.5)
+    perm = plan_to_permutation(plan)
+    assert sorted(perm.tolist()) == list(range(m))
+    import jax.numpy as jnp
+    from repro.runtime import make_migration_step
+    step = make_migration_step(m)
+    x = jnp.arange(m * 3, dtype=jnp.float32).reshape(m, 3)
+    y = step(x, jnp.asarray(perm))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x)[perm])

@@ -1,0 +1,119 @@
+"""Sharding-rule unit tests: every param/cache leaf gets a spec, specs
+rank-match their leaves, and the divisibility guarantees hold on the
+production meshes (structure-only — no 512-device init needed)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, get_optimized
+from repro.launch.mesh import make_mesh
+from repro.launch.shardings import (
+    batch_specs, cache_specs, opt_state_specs, param_specs, zero1_spec,
+)
+from repro.models import init_cache, init_params
+from repro.optim import init_opt_state
+
+
+class FakeMesh:
+    """Shape-only stand-in for the 16×16 production mesh."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+    @property
+    def size(self):
+        n = 1
+        for v in self.shape.values():
+            n *= v
+        return n
+
+
+POD = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _axis_size(mesh, name):
+    return mesh.shape[name]
+
+
+def check_spec_tree(spec_tree, shape_tree, mesh):
+    specs = jax.tree_util.tree_leaves(
+        spec_tree, is_leaf=lambda s: isinstance(s, P))
+    shapes = jax.tree_util.tree_leaves(shape_tree)
+    assert len(specs) == len(shapes)
+    for sp, leaf in zip(specs, shapes):
+        assert isinstance(sp, P)
+        assert len(sp) <= len(leaf.shape), (sp, leaf.shape)
+        for dim, entry in zip(leaf.shape, tuple(sp)):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            total = 1
+            for a in axes:
+                total *= _axis_size(mesh, a)
+            assert dim % total == 0, (sp, leaf.shape, dim, total)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("variant", ["base", "opt"])
+def test_param_and_opt_specs_divisible(arch, variant):
+    cfg = get_config(arch) if variant == "base" else get_optimized(arch)
+    params_s = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    for mesh in (POD, MULTI):
+        pspecs = param_specs(cfg, mesh, params_s)
+        check_spec_tree(pspecs, params_s, mesh)
+        opt_s = jax.eval_shape(init_opt_state, params_s)
+        ospecs = opt_state_specs(pspecs, params_s, mesh)
+        check_spec_tree(ospecs["master"], params_s, mesh)
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "whisper-large-v3",
+                                  "mixtral-8x7b", "falcon-mamba-7b",
+                                  "recurrentgemma-9b"])
+def test_cache_specs_divisible_and_bounded(arch):
+    cfg = get_config(arch)
+    from repro.configs import decode_cache_len
+    shape = SHAPES["decode_32k"]
+    cache_s = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch,
+                           decode_cache_len(cfg, shape)))
+    for mesh in (POD, MULTI):
+        cspecs = cache_specs(cfg, mesh, cache_s)
+        check_spec_tree(cspecs, cache_s, mesh)
+        # per-device KV bytes must fit a v5e (16 GB) with headroom
+        total = 0
+        for sp, leaf in zip(
+                jax.tree_util.tree_leaves(
+                    cspecs, is_leaf=lambda s: isinstance(s, P)),
+                jax.tree_util.tree_leaves(cache_s)):
+            shards = 1
+            for entry in tuple(sp):
+                if entry is None:
+                    continue
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                for a in axes:
+                    shards *= _axis_size(mesh, a)
+            total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize // shards
+        assert total < 8e9, f"{arch}: {total/1e9:.1f} GB cache per device"
+
+
+def test_zero1_adds_data_axis_on_divisible_dim():
+    spec = zero1_spec(P(None, "model"), (4096, 16 * 128), POD)
+    assert spec == P("data", "model") or spec[0] in ("data", ("data",))
+    # no divisible dim -> unchanged
+    spec2 = zero1_spec(P(None,), (4097,), POD)
+    assert spec2 == P(None)
+
+
+def test_batch_specs_replicate_unshardable():
+    cfg = get_config("falcon-mamba-7b")
+    b1 = {"tokens": jax.ShapeDtypeStruct((1, 8), jnp.int32)}
+    sp = batch_specs(cfg, POD, b1)
+    assert sp["tokens"] == P(None, None)    # B=1: replicated
+    b128 = {"tokens": jax.ShapeDtypeStruct((128, 8), jnp.int32)}
+    sp = batch_specs(cfg, POD, b128)
+    assert tuple(sp["tokens"])[0] in ("data", ("data",))
