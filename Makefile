@@ -1,0 +1,17 @@
+# Repo entrypoints.  `make test` is the ROADMAP.md tier-1 command.
+.PHONY: test test-fast bench bench-fig12 quickstart
+
+test:
+	scripts/ci.sh
+
+test-fast:
+	scripts/ci.sh fast
+
+bench:
+	PYTHONPATH=src python -m benchmarks.run
+
+bench-fig12:
+	PYTHONPATH=src python -m benchmarks.fig12_fluid_vs_progressive
+
+quickstart:
+	PYTHONPATH=src python examples/quickstart.py

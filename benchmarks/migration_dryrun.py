@@ -63,8 +63,9 @@ for n_old, n_new in [(8, 8), (8, 6), (8, 4), (4, 8)]:
     # plan-aware ppermute program
     cap = required_capacity(plan)
     fn, phases, _ = make_collective_migration(plan, n, cap)
-    sharded = jax.shard_map(fn, mesh=mesh, in_specs=P("data"),
-                            out_specs=P("data"), check_vma=False)
+    from repro.compat import shard_map
+    sharded = shard_map(fn, mesh=mesh, in_specs=P("data"),
+                        out_specs=P("data"), check_vma=False)
     with mesh:
         comp2 = jax.jit(sharded).lower(
             jax.ShapeDtypeStruct((n, cap, chunk), jnp.float32)).compile()

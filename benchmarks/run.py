@@ -19,6 +19,8 @@ SUITES = [
     ("fig8_window_response", "Fig. 8 — window size vs response time"),
     ("fig9_10_gamma", "Figs. 9/10 — γ vs cost & precompute"),
     ("fig11_live_migration", "Fig. 11 — live vs kill-restart"),
+    ("fig12_fluid_vs_progressive",
+     "Fig. 12 — fluid vs progressive latency CDF (m=10k, vectorized)"),
     ("migration_dryrun", "Dry-run — planner cost vs HLO collective bytes"),
     ("roofline_report", "Roofline — dry-run term table"),
 ]

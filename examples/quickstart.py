@@ -6,12 +6,18 @@ operator-state migration.
 A word stream flows into a stateful counting operator split into m=32 hash
 buckets across 2 nodes.  We burst-load it, scale to 5 nodes, compare SSM's
 migration bytes against the ad-hoc (Storm-default) strategy, shrink back on
-the quiet period, and verify not a single count was lost.
+the quiet period, and verify not a single count was lost.  A final section
+replays the same elastic events on the vectorized serving simulator to show
+what each migration strategy (kill_restart / live / progressive / fluid)
+costs in response-time spike.
 """
 import numpy as np
 
 from repro.core import ElasticPlanner, TauSchedule, adhoc
-from repro.runtime import ElasticWordCount, MigrationExecutor, SimBackend
+from repro.runtime import (
+    ElasticWordCount, MigrationExecutor, SimBackend, SimConfig,
+    VectorizedServingSim,
+)
 
 
 def main():
@@ -53,6 +59,24 @@ def main():
     top = sorted(before.items(), key=lambda kv: -kv[1])[:5]
     print("top-5 words:", top)
     print("OK — zero counts lost across two elastic events")
+
+    # 4) what would each migration strategy have cost in latency?  Replay a
+    # scale 2→5 event on the vectorized serving simulator (same §5
+    # semantics, array engine — scales to 10k+ buckets, see
+    # benchmarks/fig12) with the word-count app's state sizes and a steady
+    # tuple rate.
+    T, m = 12, app.m
+    w_trace = np.tile(rng.uniform(50.0, 150.0, m), (T, 1))
+    s_trace = np.tile(app.state.bucket_bytes(), (T, 1))
+    trace = np.array([2] * 4 + [5] * (T - 4))
+    print("\nstrategy comparison on the serving simulator (scale 2→5):")
+    for mode in ("kill_restart", "live", "progressive", "fluid"):
+        sv = VectorizedServingSim(
+            m, SimConfig(interval_s=10.0, bw_bytes_per_s=1e4),
+            ElasticPlanner(policy="ssm"), mode=mode, tau=0.6)
+        mets = sv.run(w_trace, s_trace, trace)
+        spike = max(x.max_response_s for x in mets)
+        print(f"  {mode:13s} worst response {spike*1e3:9.1f} ms")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 CI entrypoint.
+#
+#   scripts/ci.sh          — the ROADMAP.md tier-1 command (full suite)
+#   scripts/ci.sh fast     — fast path: skip @slow jit/model-compile tests
+#
+# Runs on a bare jax+numpy+pytest container (the hypothesis property tests
+# fall back to the vendored shim in tests/_vendor); install
+# requirements-dev.txt for full Hypothesis runs.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "fast" ]]; then
+    exec python -m pytest -x -q -m "not slow"
+fi
+exec python -m pytest -x -q

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models import decode_step, loss_fn, prefill
 from repro.models.config import ModelConfig
 from repro.optim import (
@@ -117,9 +118,9 @@ def make_compressed_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
         out_specs = (dspec(params, False), dspec(opt_state, False),
                      dspec(err, False),
                      {"loss": P(), "grad_norm": P(), "lr": P()})
-        f = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs, axis_names=set(daxes),
-                          check_vma=False)
+        f = shard_map(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, axis_names=set(daxes),
+                      check_vma=False)
         return f(params, opt_state, err, batch)
 
     # partial-manual shard_map requires a surrounding jit (eager tracing

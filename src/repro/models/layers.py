@@ -504,7 +504,8 @@ def moe_apply_manual(x, p, cfg, *, group_size: int = 1024,
     the combine reduction crosses the wire in bf16: 2× fewer bytes.  The
     routing (top-k, capacity, dispatch/combine weights) stays in auto mode.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.compat import ambient_mesh
+    mesh = ambient_mesh()
     if not getattr(cfg, "manual_moe", False) or \
             "model" not in tuple(getattr(mesh, "axis_names", ()) or ()):
         return moe_apply(x, p, cfg, group_size=group_size,
@@ -552,8 +553,10 @@ def moe_apply_manual(x, p, cfg, *, group_size: int = 1024,
                          preferred_element_type=jnp.bfloat16)
         return lax.psum(out, "model")                    # bf16 on the wire
 
-    f = jax.shard_map(
+    from repro.compat import shard_map
+    f = shard_map(
         expert_ffn,
+        mesh=mesh,
         in_specs=(P(), P(None, None, "model"), P(None, None, "model"),
                   P(None, "model", None), P()),
         out_specs=P(),

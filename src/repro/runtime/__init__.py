@@ -1,9 +1,9 @@
 from .state import BucketedState, owner_lookup, route
 from .migration import (
     JaxBackend, MigrationExecutor, MigrationReport, Move, SimBackend,
-    make_collective_migration, make_migration_step, move_list,
-    naive_duration, phase_duration, plan_to_permutation, required_capacity,
-    schedule_phases,
+    bucket_windows, fluid_budget, make_collective_migration,
+    make_migration_step, move_list, naive_duration, phase_duration,
+    plan_to_permutation, required_capacity, schedule_phases,
 )
 from .checkpoint import CheckpointManager, RestoreReport
 from .ft import (
@@ -11,17 +11,26 @@ from .ft import (
     weighted_plan,
 )
 from .elastic import ElasticController, ElasticEvent
-from .serving import ElasticServingSim, ElasticWordCount, SimConfig
+from .serving import (
+    ElasticServingSim, ElasticWordCount, IntervalMetrics, SimConfig,
+)
+from .simulator import (
+    ChainedDataflowSim, StageSpec, VectorizedServingSim, slot_step,
+    weighted_percentile,
+)
 
 __all__ = [
     "BucketedState", "owner_lookup", "route",
     "JaxBackend", "MigrationExecutor", "MigrationReport", "Move",
-    "SimBackend", "make_collective_migration", "make_migration_step",
+    "SimBackend", "bucket_windows", "fluid_budget",
+    "make_collective_migration", "make_migration_step",
     "move_list", "naive_duration", "phase_duration", "plan_to_permutation",
     "required_capacity", "schedule_phases",
     "CheckpointManager", "RestoreReport",
     "SpeedTracker", "physical_migration_cost", "recovery_plan",
     "restored_bytes", "weighted_plan",
     "ElasticController", "ElasticEvent",
-    "ElasticServingSim", "ElasticWordCount", "SimConfig",
+    "ElasticServingSim", "ElasticWordCount", "IntervalMetrics", "SimConfig",
+    "ChainedDataflowSim", "StageSpec", "VectorizedServingSim", "slot_step",
+    "weighted_percentile",
 ]

@@ -41,13 +41,19 @@ class ElasticController:
                  planner: Optional[ElasticPlanner] = None,
                  executor: Optional[MigrationExecutor] = None,
                  ckpt: Optional[CheckpointManager] = None,
-                 tau: float = 1.2):
+                 tau: float = 1.2, strategy: Optional[str] = None,
+                 fluid_batch: int = 1):
         cuts = np.linspace(0, m, n_nodes + 1).round().astype(int)
         self.assign = Assignment.from_boundaries(m, list(cuts))
         self.m = m
         self.tau = tau
         self.planner = planner or ElasticPlanner(policy="ssm")
-        self.executor = executor or MigrationExecutor(mode="live")
+        if executor is not None and (strategy is not None
+                                     or fluid_batch != 1):
+            raise ValueError("pass either executor or strategy/fluid_batch, "
+                             "not both (set them on the executor instead)")
+        self.executor = executor or MigrationExecutor(
+            mode=strategy or "live", fluid_batch=fluid_batch)
         self.ckpt = ckpt
         self.history: List[int] = [n_nodes]
         self.speeds = SpeedTracker(n_nodes)

@@ -106,6 +106,40 @@ def naive_duration(moves: Sequence[Move], bw_bytes_per_s: float) -> float:
     return total / bw_bytes_per_s
 
 
+def fluid_budget(bucket_bytes: np.ndarray, batch: int) -> float:
+    """Phase budget for Megaphone-style fluid migration: at most ``batch``
+    buckets' worth of bytes in flight per node per phase.  batch=1 is pure
+    fluid (each bucket's pause ≈ its own transfer); large batches recover
+    live migration's single bulk phase; batch=max_inflight matches the
+    progressive mode."""
+    mx = float(bucket_bytes.max()) if len(bucket_bytes) else 1.0
+    return max(batch, 1) * mx
+
+
+def bucket_windows(phases: Sequence[Sequence[Move]], bw_bytes_per_s: float,
+                   m: int, fluid: bool = False
+                   ) -> Tuple[np.ndarray, np.ndarray, float]:
+    """Per-bucket unavailability windows [from, until) implied by running the
+    phases back-to-back, plus the total migration duration.
+
+    With ``fluid=False`` (paper §5.2 live/progressive semantics) a moving
+    bucket stops at its old owner when the migration *begins*, so its window
+    opens at 0 and closes when its phase lands.  With ``fluid=True``
+    (Megaphone, Hoffmann et al. 1812.01371) a bucket keeps processing until
+    its own phase starts: the window is exactly its phase's [start, end).
+    """
+    un_from = np.zeros(m)
+    un_until = np.zeros(m)
+    clock = 0.0
+    for ph in phases:
+        dur = phase_duration(ph, bw_bytes_per_s)
+        for mv in ph:
+            un_from[mv.bucket] = clock if fluid else 0.0
+            un_until[mv.bucket] = clock + dur
+        clock += dur
+    return un_from, un_until, clock
+
+
 # ---------------------------------------------------------------------------
 # Backends
 # ---------------------------------------------------------------------------
@@ -167,13 +201,24 @@ class MigrationExecutor:
                     until their phase lands (paper §5.2).
       progressive — live + mini-migrations: at most ``max_inflight`` move-in
                     buckets per node at a time (paper §5.2 last ¶).
+      fluid       — Megaphone-style per-bucket sequencing: ``fluid_batch``
+                    buckets per node per phase (default 1), each bucket
+                    paused only for its own transfer window.
+      kill_restart— alias of suspend (full stop; the serving simulators
+                    additionally charge the restart overhead).
     """
 
+    MODES = ("suspend", "kill_restart", "live", "progressive", "fluid")
+
     def __init__(self, backend=None, mode: str = "live",
-                 max_inflight: int = 4):
+                 max_inflight: int = 4, fluid_batch: int = 1):
+        if mode not in self.MODES:
+            raise ValueError(f"mode must be one of {self.MODES}, "
+                             f"got {mode!r}")
         self.backend = backend or SimBackend()
         self.mode = mode
         self.max_inflight = max_inflight
+        self.fluid_batch = fluid_batch
 
     def execute(self, plan: MigrationPlan, state: BucketedState,
                 placement: np.ndarray) -> MigrationReport:
@@ -182,6 +227,11 @@ class MigrationExecutor:
         if self.mode == "progressive":
             budget = self.max_inflight * (bb.max() if len(bb) else 1.0)
             phases = schedule_phases(moves, phase_budget=budget)
+        elif self.mode == "fluid":
+            phases = schedule_phases(
+                moves, phase_budget=fluid_budget(bb, self.fluid_batch))
+        elif self.mode in ("suspend", "kill_restart"):
+            phases = [list(moves)] if moves else []   # one bulk transfer
         else:
             phases = schedule_phases(moves)
         t0 = getattr(self.backend, "clock", 0.0)

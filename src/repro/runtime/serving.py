@@ -4,7 +4,7 @@ deterministic fluid simulation + the word-count quickstart app.
 The simulator reproduces the paper's Fig. 8/11 methodology: items arrive per
 interval per bucket, nodes drain their buckets' queues at fixed capacity,
 and migrations make "to move in" buckets unavailable at the destination
-until their phase lands.  Three migration designs are modeled:
+until their phase lands.  Four migration designs are modeled:
 
 * kill_restart — Storm default (paper §5 intro): the whole app stops for the
                  full state transfer + restart overhead.
@@ -13,9 +13,17 @@ until their phase lands.  Three migration designs are modeled:
                  table are forwarded (+1 hop latency).
 * progressive  — §5.2 last ¶: mini-migrations bound simultaneously-suspended
                  buckets, trading total duration for smaller latency spikes.
+* fluid        — Megaphone-style (Hoffmann et al. 1812.01371) per-bucket
+                 sequencing: each bucket pauses only for its own transfer
+                 window; ``fluid_batch`` interpolates back toward
+                 progressive/live.
 
-The same ElasticOperator drives the real word-count application in
-examples/quickstart.py (numpy counters as operator state).
+This scalar per-node loop is kept as the small-instance differential-test
+oracle; the production array engine is repro.runtime.simulator
+(VectorizedServingSim — same semantics, numpy/jax vector ops over all m
+buckets, 10k+ buckets in seconds).  The same ElasticOperator machinery
+drives the real word-count application in examples/quickstart.py (numpy
+counters as operator state).
 """
 from __future__ import annotations
 
@@ -24,11 +32,15 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import Assignment, ElasticPlanner, MigrationPlan
-from .migration import (
-    MigrationExecutor, Move, move_list, naive_duration, phase_duration,
-    schedule_phases,
+from repro.core import (
+    Assignment, ElasticPlanner, MigrationPlan, satisfies_balance,
 )
+from .migration import (
+    MigrationExecutor, Move, bucket_windows, fluid_budget, move_list,
+    naive_duration, phase_duration, schedule_phases,
+)
+
+SERVING_MODES = ("kill_restart", "live", "progressive", "fluid")
 
 
 @dataclass
@@ -52,6 +64,55 @@ class IntervalMetrics:
     max_response_s: float = 0.0
     forwarded: int = 0
     dropped_capacity: float = 0.0
+    delivered: float = 0.0           # tuples drained this interval
+
+
+def plan_interval_windows(planner: ElasticPlanner, assign: Assignment,
+                          n_t: int, w_t: np.ndarray, s_t: np.ndarray,
+                          sim: SimConfig, mode: str, tau: float,
+                          max_inflight: int, fluid_batch: int,
+                          met: IntervalMetrics):
+    """One interval's migration decision: trigger (scale event or τ
+    violation), plan, and per-bucket unavailability windows.  Shared by the
+    scalar oracle (ElasticServingSim) and the vectorized engine
+    (simulator.VectorizedServingSim) so the two cannot drift.
+
+    Returns (assign', unavailable_from[m], unavailable_until[m], freeze)."""
+    m = assign.m
+    unavailable_from = np.zeros(m)
+    unavailable_until = np.zeros(m)
+    freeze = 0.0
+    n_cur = sum(1 for lo, hi in assign.intervals if hi > lo)
+    # migrate on scale events AND on load-skew violations (the paper's
+    # rebalancing trigger, §1/§2.1)
+    if n_t != n_cur or not satisfies_balance(assign, w_t, n_t, tau):
+        plan = planner.plan(assign, n_t, w_t, s_t, tau=tau)
+        moves = move_list(plan, s_t)
+        met.migration_cost_bytes = plan.cost
+        if not moves:
+            # re-plan changed nothing (e.g. the planner legitimately left a
+            # target node empty): no transfer, no restart
+            pass
+        elif mode == "kill_restart":
+            freeze = naive_duration(moves, sim.bw_bytes_per_s) + \
+                sim.restart_overhead_s
+            met.migration_duration_s = freeze
+        else:
+            budget = None
+            if mode == "progressive":
+                mx = s_t.max() if len(s_t) else 1.0
+                budget = max_inflight * mx
+            elif mode == "fluid":
+                budget = fluid_budget(s_t, fluid_batch)
+            phases = schedule_phases(moves, phase_budget=budget)
+            unavailable_from, unavailable_until, clock = bucket_windows(
+                phases, sim.bw_bytes_per_s, m, fluid=mode == "fluid")
+            met.migration_duration_s = clock
+            win = np.minimum(unavailable_until, sim.interval_s) - \
+                np.minimum(unavailable_from, sim.interval_s)
+            met.forwarded = int((w_t / sim.interval_s * win).sum())
+        assign = plan.new
+    return assign, unavailable_from, unavailable_until, freeze
 
 
 class ElasticServingSim:
@@ -59,18 +120,20 @@ class ElasticServingSim:
 
     def __init__(self, m: int, sim: SimConfig, planner: ElasticPlanner,
                  mode: str = "live", max_inflight: int = 4,
-                 tau: float = 0.4):
+                 tau: float = 0.4, fluid_batch: int = 1):
+        if mode not in SERVING_MODES:
+            raise ValueError(f"mode must be one of {SERVING_MODES}, "
+                             f"got {mode!r}")
         self.m = m
         self.sim = sim
         self.planner = planner
         self.mode = mode
         self.max_inflight = max_inflight
         self.tau = tau
+        self.fluid_batch = fluid_batch
 
     def run(self, w: np.ndarray, s: np.ndarray, node_trace: Sequence[int]
             ) -> List[IntervalMetrics]:
-        from repro.core import satisfies_balance
-
         T, m = w.shape
         assert m == self.m
         cuts = np.linspace(0, m, node_trace[0] + 1).round().astype(int)
@@ -80,45 +143,18 @@ class ElasticServingSim:
         for t in range(T):
             n_t = int(node_trace[t])
             met = IntervalMetrics(t=t, n_nodes=n_t)
-            unavailable_until = np.zeros(m)        # per-bucket, seconds
-            freeze_until = 0.0
-            n_cur = sum(1 for lo, hi in assign.intervals if hi > lo)
-            # migrate on scale events AND on load-skew violations (the
-            # paper's rebalancing trigger, §1/§2.1)
-            if n_t != n_cur or not satisfies_balance(
-                    assign, w[t], n_t, self.tau):
-                plan = self.planner.plan(assign, n_t, w[t], s[t],
-                                         tau=self.tau)
-                moves = move_list(plan, s[t])
-                met.migration_cost_bytes = plan.cost
-                if self.mode == "kill_restart":
-                    dur = naive_duration(moves, self.sim.bw_bytes_per_s) + \
-                        self.sim.restart_overhead_s
-                    freeze_until = dur
-                    met.migration_duration_s = dur
-                else:
-                    budget = None
-                    if self.mode == "progressive":
-                        mx = s[t].max() if len(s[t]) else 1.0
-                        budget = self.max_inflight * mx
-                    phases = schedule_phases(moves, phase_budget=budget)
-                    clock = 0.0
-                    for ph in phases:
-                        dur = phase_duration(ph, self.sim.bw_bytes_per_s)
-                        for mv in ph:
-                            unavailable_until[mv.bucket] = clock + dur
-                        clock += dur
-                    met.migration_duration_s = clock
-                    met.forwarded = int(
-                        (w[t] / self.sim.interval_s
-                         * np.minimum(unavailable_until,
-                                      self.sim.interval_s)).sum())
-                assign = plan.new
+            assign, unavailable_from, unavailable_until, freeze_until = \
+                plan_interval_windows(self.planner, assign, n_t, w[t],
+                                      s[t], self.sim, self.mode, self.tau,
+                                      self.max_inflight, self.fluid_batch,
+                                      met)
             out.append(self._drain(t, w[t], assign, queues,
-                                   unavailable_until, freeze_until, met))
+                                   unavailable_from, unavailable_until,
+                                   freeze_until, met))
         return out
 
-    def _drain(self, t, w_t, assign, queues, unavailable_until, freeze_until,
+    def _drain(self, t, w_t, assign, queues, unavailable_from,
+               unavailable_until, freeze_until,
                met: IntervalMetrics) -> IntervalMetrics:
         sim = self.sim
         K = sim.slots_per_interval
@@ -136,7 +172,8 @@ class ElasticServingSim:
         max_lat = 0.0
         for k in range(K):
             now = k * dt
-            avail = (now >= unavailable_until) & (now >= freeze_until)
+            avail = ((now < unavailable_from) | (now >= unavailable_until)) \
+                & (now >= freeze_until)
             queues += arr_rate * dt
             # each node drains its available buckets proportionally
             for i in range(len(assign.intervals)):
@@ -158,6 +195,7 @@ class ElasticServingSim:
                     lat_num += served * (wait + sim.service_s)
                     lat_den += served
                     max_lat = max(max_lat, wait + sim.service_s)
+                    met.delivered += served
         met.mean_response_s = lat_num / max(lat_den, 1e-12)
         met.max_response_s = max_lat
         met.dropped_capacity = float(queues.sum())
@@ -174,7 +212,7 @@ class ElasticWordCount:
     def __init__(self, m: int = 64, vocab: int = 10_000,
                  planner: Optional[ElasticPlanner] = None,
                  executor: Optional[MigrationExecutor] = None,
-                 n_nodes: int = 2):
+                 n_nodes: int = 2, strategy: Optional[str] = None):
         from .state import BucketedState, route
         self.m, self.vocab = m, vocab
         self.route = lambda words: route(words, m)
@@ -190,7 +228,10 @@ class ElasticWordCount:
             planner = ElasticPlanner(policy="ssm",
                                      tau=TauSchedule(base=1.2, grow=0.2))
         self.planner = planner
-        self.executor = executor or MigrationExecutor(mode="live")
+        if executor is not None and strategy is not None:
+            raise ValueError("pass either executor or strategy, not both "
+                             "(set mode on the executor instead)")
+        self.executor = executor or MigrationExecutor(mode=strategy or "live")
         self.work = np.zeros(m)
 
     def ingest(self, words: np.ndarray) -> None:

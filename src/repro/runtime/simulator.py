@@ -1,0 +1,433 @@
+"""Vectorized elastic-serving simulator (paper §5 at production scale).
+
+``repro.runtime.serving.ElasticServingSim`` models one operator with a
+scalar per-node Python loop — exact, but it caps Fig. 8/11-style studies at
+toy bucket counts.  This module re-states the same fluid-queue semantics as
+*array programs*: per-bucket queues, per-bucket unavailability windows and
+per-node capacities all live in flat ``[m]`` arrays, so one simulation slot
+is a handful of numpy (or jit-compiled jax) ops over all ``m`` buckets at
+once.  10k+ buckets over multi-hour traces run in seconds on CPU.
+
+Array layout (one operator):
+
+    queues[m]       f64  per-bucket backlog (tuples)
+    owner[m]        i64  bucket -> node id (from Assignment.owner_of())
+    arr_rate[m]     f64  per-bucket arrival rate this interval (tuples/s)
+    un_from[m]      f64  unavailability window start, seconds into interval
+    un_until[m]     f64  unavailability window end
+    freeze          f64  scalar: kill-restart full-app freeze deadline
+
+Per slot (dt seconds): buckets outside their unavailability window are
+drained by their node proportionally to queue length, bounded by the node
+capacity budget ``cap·dt``; waiting time ≈ node queue / capacity.  Node
+aggregation is a bincount/segment-sum over ``owner`` — no Python loop over
+nodes or buckets.
+
+Migration strategies (see serving.py / README.md): ``kill_restart``,
+``live``, ``progressive``, and ``fluid`` — Megaphone-style (Hoffmann et
+al., 1812.01371) per-bucket sequencing where each bucket pauses only for
+its own transfer window; ``fluid_batch`` interpolates kill_restart ↔
+progressive ↔ fluid through the same ``schedule_phases`` machinery.
+
+``ChainedDataflowSim`` lifts the engine to chained multi-operator dataflows
+(map → aggregate → join): every stage has its own assignment, strategy and
+state sizes; a stage's drained tuples are re-routed (hash remap) into the
+next stage's buckets one slot later, and migrations overlap freely across
+stages.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import Assignment, ElasticPlanner
+from .serving import IntervalMetrics, SimConfig, plan_interval_windows
+
+MODES = ("kill_restart", "live", "progressive", "fluid")
+
+
+# ---------------------------------------------------------------------------
+# One simulation slot as pure array math (shared by the single-operator and
+# chained engines).  Mirrors ElasticServingSim._drain bucket-for-bucket.
+# ---------------------------------------------------------------------------
+
+def slot_step(queues: np.ndarray, owner: np.ndarray, n_seg: int,
+              budget: float, avail: np.ndarray
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Drain one slot.  Returns (drained[m], node_q[n_seg], served[n_seg]).
+
+    drained_j = min(q_j, budget · q_j / Σ_node q)  for available buckets —
+    each node splits its capacity budget across its available buckets
+    proportionally to their backlog (processor sharing).
+    """
+    qa = np.where(avail, queues, 0.0)
+    node_q = np.bincount(owner, weights=qa, minlength=n_seg)
+    denom = np.maximum(node_q, 1e-12)
+    drained = np.minimum(qa, budget * qa / denom[owner])
+    served = np.bincount(owner, weights=drained, minlength=n_seg)
+    return drained, node_q, served
+
+
+def _avail_mask(now: float, un_from: np.ndarray, un_until: np.ndarray,
+                freeze: float) -> np.ndarray:
+    return ((now < un_from) | (now >= un_until)) & (now >= freeze)
+
+
+def _node_env(assign: Assignment, w_t: np.ndarray, sim: SimConfig,
+              tau: float) -> Tuple[np.ndarray, int, float]:
+    """(owner[m], segment count, per-node capacity) for one interval —
+    capacity provisioned to the balance cap (Def. 2.1):
+    headroom · (1+τ) · rate / n_active."""
+    owner = assign.padded(max(assign.n_nodes, 1)).owner_of()
+    n_seg = int(owner.max()) + 1
+    n_active = max(sum(1 for lo, hi in assign.intervals if hi > lo), 1)
+    total_rate = max(w_t.sum() / sim.interval_s, 1e-9)
+    cap_node = sim.headroom * (1 + tau) * total_rate / n_active
+    return owner, n_seg, cap_node
+
+
+# ---------------------------------------------------------------------------
+# Single-operator vectorized engine
+# ---------------------------------------------------------------------------
+
+class VectorizedServingSim:
+    """Array-program re-implementation of ElasticServingSim.
+
+    Drop-in: same constructor shape, same ``run(w, s, node_trace) ->
+    [IntervalMetrics]`` contract, same planner/trigger logic — differential
+    tests pin it to the scalar oracle on small instances.  Extras:
+
+    * ``mode="fluid"`` with a ``fluid_batch`` knob (1 = pure Megaphone).
+    * ``backend="jax"`` jit-compiles the K-slot drain loop (recommended for
+      m ≳ 10⁵; numpy is already fast at m = 10⁴).
+    * ``record_latency=True`` keeps per-slot (latency, served-weight)
+      samples for CDF studies (benchmarks/fig12_fluid_vs_progressive.py).
+    """
+
+    def __init__(self, m: int, sim: SimConfig, planner: ElasticPlanner,
+                 mode: str = "live", max_inflight: int = 4,
+                 tau: float = 0.4, fluid_batch: int = 1,
+                 backend: str = "numpy", record_latency: bool = False):
+        if mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+        if backend not in ("numpy", "jax"):
+            raise ValueError(f"backend must be numpy|jax, got {backend!r}")
+        self.m = m
+        self.sim = sim
+        self.planner = planner
+        self.mode = mode
+        self.max_inflight = max_inflight
+        self.tau = tau
+        self.fluid_batch = fluid_batch
+        self.backend = backend
+        self.record_latency = record_latency
+        self.latency_values: List[np.ndarray] = []
+        self.latency_weights: List[np.ndarray] = []
+        self.latency_intervals: List[int] = []   # met.t per recorded batch
+        self._jit_cache: Dict[tuple, object] = {}
+
+    # -- migration planning (the exact scalar-sim logic, shared) -----------
+    def _interval_windows(self, assign: Assignment, n_t: int,
+                          w_t: np.ndarray, s_t: np.ndarray,
+                          met: IntervalMetrics
+                          ) -> Tuple[Assignment, np.ndarray, np.ndarray,
+                                     float]:
+        return plan_interval_windows(self.planner, assign, n_t, w_t, s_t,
+                                     self.sim, self.mode, self.tau,
+                                     self.max_inflight, self.fluid_batch,
+                                     met)
+
+    def run(self, w: np.ndarray, s: np.ndarray,
+            node_trace: Sequence[int]) -> List[IntervalMetrics]:
+        T, m = w.shape
+        assert m == self.m
+        # samples are per-run: interval ids restart at 0 every run
+        self.latency_values.clear()
+        self.latency_weights.clear()
+        self.latency_intervals.clear()
+        cuts = np.linspace(0, m, int(node_trace[0]) + 1).round().astype(int)
+        assign = Assignment.from_boundaries(m, list(cuts))
+        queues = np.zeros(m)
+        out: List[IntervalMetrics] = []
+        for t in range(T):
+            n_t = int(node_trace[t])
+            met = IntervalMetrics(t=t, n_nodes=n_t)
+            assign, un_from, un_until, freeze = self._interval_windows(
+                assign, n_t, w[t], s[t], met)
+            queues = self._drain(w[t], assign, queues, un_from, un_until,
+                                 freeze, met)
+            out.append(met)
+        return out
+
+    # -- vectorized drain ---------------------------------------------------
+    def _drain(self, w_t: np.ndarray, assign: Assignment,
+               queues: np.ndarray, un_from: np.ndarray,
+               un_until: np.ndarray, freeze: float,
+               met: IntervalMetrics) -> np.ndarray:
+        sim = self.sim
+        K = sim.slots_per_interval
+        dt = sim.interval_s / K
+        owner, n_seg, cap_node = _node_env(assign, w_t, sim, self.tau)
+        arr_rate = w_t / sim.interval_s
+        if self.backend == "jax":
+            queues, wait_mat, served_mat = self._drain_jax(
+                queues, arr_rate, owner, n_seg, cap_node, dt, K,
+                un_from, un_until, freeze)
+        else:
+            queues, wait_mat, served_mat = self._drain_numpy(
+                queues, arr_rate, owner, n_seg, cap_node, dt, K,
+                un_from, un_until, freeze)
+        # metrics from the [K, n_seg] per-slot per-node matrices
+        lat_mat = wait_mat + sim.service_s
+        mask = served_mat > 0
+        lat_den = float(served_mat[mask].sum())
+        met.mean_response_s = float(
+            (served_mat * lat_mat)[mask].sum()) / max(lat_den, 1e-12)
+        met.max_response_s = float(lat_mat[mask].max()) if mask.any() else 0.0
+        met.delivered = float(served_mat.sum())
+        met.dropped_capacity = float(queues.sum())
+        if self.record_latency and mask.any():
+            self.latency_values.append(lat_mat[mask])
+            self.latency_weights.append(served_mat[mask])
+            self.latency_intervals.append(met.t)
+        return queues
+
+    def _drain_numpy(self, queues, arr_rate, owner, n_seg, cap_node, dt, K,
+                     un_from, un_until, freeze):
+        queues = queues.copy()
+        budget = cap_node * dt
+        wait_mat = np.zeros((K, n_seg))
+        served_mat = np.zeros((K, n_seg))
+        for k in range(K):
+            now = k * dt
+            avail = _avail_mask(now, un_from, un_until, freeze)
+            queues += arr_rate * dt
+            drained, node_q, served = slot_step(queues, owner, n_seg,
+                                                budget, avail)
+            queues -= drained
+            wait_mat[k] = node_q / cap_node
+            served_mat[k] = served
+        return queues, wait_mat, served_mat
+
+    def _drain_jax(self, queues, arr_rate, owner, n_seg, cap_node, dt, K,
+                   un_from, un_until, freeze):
+        import jax.numpy as jnp
+        fn = self._get_jit_drain(self.m, n_seg, K)
+        q, wait_mat, served_mat = fn(
+            jnp.asarray(queues), jnp.asarray(arr_rate),
+            jnp.asarray(owner), jnp.asarray(un_from),
+            jnp.asarray(un_until), jnp.float32(freeze),
+            jnp.float32(cap_node), jnp.float32(dt))
+        return (np.asarray(q, np.float64), np.asarray(wait_mat, np.float64),
+                np.asarray(served_mat, np.float64))
+
+    def _get_jit_drain(self, m: int, n_seg: int, K: int):
+        key = (m, n_seg, K)
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        import jax
+        import jax.numpy as jnp
+
+        def drain(queues, arr_rate, owner, un_from, un_until, freeze,
+                  cap_node, dt):
+            budget = cap_node * dt
+
+            def body(k, carry):
+                queues, wait_mat, served_mat = carry
+                now = k.astype(queues.dtype) * dt
+                avail = ((now < un_from) | (now >= un_until)) & \
+                    (now >= freeze)
+                queues = queues + arr_rate * dt
+                qa = jnp.where(avail, queues, 0.0)
+                node_q = jax.ops.segment_sum(qa, owner,
+                                             num_segments=n_seg)
+                denom = jnp.maximum(node_q, 1e-12)
+                drained = jnp.minimum(qa, budget * qa / denom[owner])
+                served = jax.ops.segment_sum(drained, owner,
+                                             num_segments=n_seg)
+                queues = queues - drained
+                wait_mat = wait_mat.at[k].set(node_q / cap_node)
+                served_mat = served_mat.at[k].set(served)
+                return queues, wait_mat, served_mat
+
+            init = (queues, jnp.zeros((K, n_seg), queues.dtype),
+                    jnp.zeros((K, n_seg), queues.dtype))
+            return jax.lax.fori_loop(0, K, body, init)
+
+        fn = jax.jit(drain)
+        self._jit_cache[key] = fn
+        return fn
+
+    def latency_samples(self, intervals: Optional[set] = None
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        """(values, weights) pooled over the run (record_latency); pass a
+        set of interval ids to restrict (e.g. migration intervals only)."""
+        pick = [i for i, t in enumerate(self.latency_intervals)
+                if intervals is None or t in intervals]
+        if not pick:
+            return np.zeros(0), np.zeros(0)
+        return (np.concatenate([self.latency_values[i] for i in pick]),
+                np.concatenate([self.latency_weights[i] for i in pick]))
+
+
+def weighted_percentile(values: np.ndarray, weights: np.ndarray,
+                        q: float) -> float:
+    """q-th percentile (0..100) of a served-weighted latency sample."""
+    if len(values) == 0:
+        return 0.0
+    order = np.argsort(values)
+    v, wt = values[order], weights[order]
+    cum = np.cumsum(wt)
+    return float(v[np.searchsorted(cum, q / 100.0 * cum[-1])])
+
+
+# ---------------------------------------------------------------------------
+# Chained multi-operator dataflows
+# ---------------------------------------------------------------------------
+
+@dataclass
+class StageSpec:
+    """One operator stage in a chained dataflow."""
+
+    name: str
+    mode: str = "live"
+    tau: float = 0.4
+    max_inflight: int = 4
+    fluid_batch: int = 1
+    planner: Optional[ElasticPlanner] = None
+    route_seed: int = 0        # hash remap from the upstream stage's buckets
+    state_scale: float = 1.0   # stage state bytes = scale · base s[t]
+
+
+@dataclass
+class StageMetrics:
+    metrics: List[IntervalMetrics] = field(default_factory=list)
+
+
+class ChainedDataflowSim:
+    """Chained dataflow (e.g. map → aggregate → join) on the array engine.
+
+    All stages share the bucket count ``m`` and slot clock; stage i's
+    drained tuples in slot k arrive at stage i+1 in slot k+1, re-routed by a
+    per-stage hash permutation (the downstream operator partitions by a
+    different key).  Each stage owns an independent assignment, planner and
+    migration strategy, so migrations overlap freely across stages — e.g.
+    the aggregate stage can run a fluid migration while the join stage is
+    mid-progressive-migration.
+    """
+
+    def __init__(self, m: int, sim: SimConfig, stages: Sequence[StageSpec]):
+        from .state import route
+        self.m = m
+        self.sim = sim
+        self.stages = list(stages)
+        if not self.stages:
+            raise ValueError("need at least one stage")
+        # bucket remap into stage i (i >= 1): upstream bucket j feeds
+        # perm[j]; a permutation-free hash (collisions fine, mass conserved)
+        self.remaps = [None] + [
+            route(np.arange(m), m, seed=sp.route_seed + 1 + i)
+            for i, sp in enumerate(self.stages[1:])]
+
+    def run(self, w: np.ndarray, s: np.ndarray,
+            node_traces) -> List[List[IntervalMetrics]]:
+        """``w``: external arrivals [T, m]; ``s``: base state sizes [T, m];
+        ``node_traces``: [T] shared or list of per-stage [T] traces.
+        Returns per-stage IntervalMetrics lists."""
+        T, m = w.shape
+        assert m == self.m
+        S = len(self.stages)
+        traces = node_traces if isinstance(node_traces, (list, tuple)) and \
+            np.ndim(node_traces[0]) > 0 else [node_traces] * S
+        assert len(traces) == S
+        sims = [VectorizedServingSim(
+            m, self.sim,
+            sp.planner or ElasticPlanner(policy="greedy"),
+            mode=sp.mode, max_inflight=sp.max_inflight, tau=sp.tau,
+            fluid_batch=sp.fluid_batch) for sp in self.stages]
+        assigns = []
+        for i in range(S):
+            cuts = np.linspace(0, m, int(traces[i][0]) + 1).round()
+            assigns.append(
+                Assignment.from_boundaries(m, list(cuts.astype(int))))
+        queues = [np.zeros(m) for _ in range(S)]
+        inflow = [np.zeros(m) for _ in range(S)]   # tuples landing next slot
+        out: List[List[IntervalMetrics]] = [[] for _ in range(S)]
+        K = self.sim.slots_per_interval
+        dt = self.sim.interval_s / K
+        # per-interval workload estimate seen by each stage: stage 0 sees w,
+        # downstream stages see the upstream interval totals re-routed
+        for t in range(T):
+            w_stage = [w[t]]
+            for i in range(1, S):
+                w_stage.append(np.bincount(self.remaps[i],
+                                           weights=w_stage[i - 1],
+                                           minlength=m))
+            stage_env = []
+            for i in range(S):
+                n_t = int(traces[i][t])
+                met = IntervalMetrics(t=t, n_nodes=n_t)
+                s_t = s[t] * self.stages[i].state_scale
+                assigns[i], un_from, un_until, freeze = \
+                    sims[i]._interval_windows(assigns[i], n_t, w_stage[i],
+                                              s_t, met)
+                owner, n_seg, cap = _node_env(assigns[i], w_stage[i],
+                                              self.sim, self.stages[i].tau)
+                stage_env.append(dict(met=met, un_from=un_from,
+                                      un_until=un_until, freeze=freeze,
+                                      owner=owner, n_seg=n_seg,
+                                      cap=cap, lat_num=0.0, lat_den=0.0,
+                                      max_lat=0.0))
+            arr0 = w[t] / self.sim.interval_s * dt
+            for k in range(K):
+                now = k * dt
+                # snapshot: stage i's slot-k output lands at stage i+1 in
+                # slot k+1 (one-hop pipeline delay)
+                adds = [arr0] + [inflow[i] for i in range(1, S)]
+                for i in range(S):
+                    env = stage_env[i]
+                    queues[i] += adds[i]
+                    avail = _avail_mask(now, env["un_from"],
+                                        env["un_until"], env["freeze"])
+                    drained, node_q, served = slot_step(
+                        queues[i], env["owner"], env["n_seg"],
+                        env["cap"] * dt, avail)
+                    queues[i] -= drained
+                    if i + 1 < S:
+                        inflow[i + 1] = np.bincount(
+                            self.remaps[i + 1], weights=drained,
+                            minlength=m)
+                    sv = served.sum()
+                    if sv > 0:
+                        wait = node_q / env["cap"]
+                        lat = wait + self.sim.service_s
+                        act = served > 0
+                        env["lat_num"] += float((served * lat)[act].sum())
+                        env["lat_den"] += float(served[act].sum())
+                        env["max_lat"] = max(env["max_lat"],
+                                             float(lat[act].max()))
+                        env["met"].delivered += float(sv)
+            for i in range(S):
+                env = stage_env[i]
+                met = env["met"]
+                met.mean_response_s = env["lat_num"] / max(env["lat_den"],
+                                                           1e-12)
+                met.max_response_s = env["max_lat"]
+                met.dropped_capacity = float(queues[i].sum())
+                out[i].append(met)
+        self.final_queues = queues
+        self.final_inflow = inflow
+        return out
+
+    def end_to_end_latency(self, per_stage: List[List[IntervalMetrics]]
+                           ) -> np.ndarray:
+        """Per-interval end-to-end mean: stage means + pipeline hop delays."""
+        T = len(per_stage[0])
+        dt = self.sim.interval_s / self.sim.slots_per_interval
+        hops = (len(self.stages) - 1) * dt
+        return np.array([
+            sum(per_stage[i][t].mean_response_s
+                for i in range(len(self.stages))) + hops
+            for t in range(T)])

@@ -71,7 +71,8 @@ def _tree_leaves(tree) -> List[np.ndarray]:
 def route(keys: np.ndarray, m: int, seed: int = 0) -> np.ndarray:
     """Partitioning function f(r): stable integer hash -> [0, m)."""
     k = np.asarray(keys, dtype=np.uint64)
-    s = np.uint64(seed * 0x9E3779B97F4A7C15 + 0xBF58476D1CE4E5B9)
+    s = np.uint64((seed * 0x9E3779B97F4A7C15 + 0xBF58476D1CE4E5B9)
+                  % (1 << 64))
     x = (k + s) * np.uint64(0x94D049BB133111EB)
     x ^= x >> np.uint64(29)
     x *= np.uint64(0xBF58476D1CE4E5B9)

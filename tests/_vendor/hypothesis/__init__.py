@@ -1,0 +1,155 @@
+"""Minimal deterministic stand-in for the slice of Hypothesis this suite uses.
+
+Only importable when the real ``hypothesis`` is absent (tests/conftest.py
+inserts this directory into sys.path as a fallback) so a bare
+``jax + numpy + pytest`` container can still collect and run the whole
+property-test suite.  Install the real package (requirements-dev.txt) for
+shrinking, the full strategy library, and adversarial example generation.
+
+Implemented surface:
+    @given(**kwargs) / @given(*args)   — runs the test over N drawn examples
+    @settings(max_examples=, deadline=) — honoured in either decorator order
+    strategies.integers / floats / booleans / sampled_from / lists / tuples
+    assume(condition)                   — skips the current example
+    HealthCheck                         — accepted and ignored
+
+Examples are drawn from a PRNG seeded by the test's qualified name, so runs
+are reproducible; boundary values are always tried first (the cheap half of
+what real Hypothesis' shrinking buys).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+from . import strategies
+from .strategies import SearchStrategy
+
+__version__ = "0.0-repro-shim"
+__all__ = ["given", "settings", "assume", "strategies", "HealthCheck"]
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class UnsatisfiedAssumption(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class HealthCheck:
+    """Accepted for API compatibility; the shim has no health checks."""
+    all = classmethod(lambda cls: [])
+    too_slow = data_too_large = filter_too_much = None
+
+
+class settings:
+    """Both a decorator (``@settings(...)``) and a value object."""
+
+    def __init__(self, max_examples: int = _DEFAULT_MAX_EXAMPLES,
+                 deadline=None, **_ignored):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._shim_settings = self
+        return fn
+
+
+def _resolve_max_examples(*fns) -> int:
+    for f in fns:
+        s = getattr(f, "_shim_settings", None)
+        if s is not None:
+            return s.max_examples
+    return _DEFAULT_MAX_EXAMPLES
+
+
+def given(*arg_strategies, **kw_strategies):
+    for s in list(arg_strategies) + list(kw_strategies.values()):
+        if not isinstance(s, SearchStrategy):
+            raise TypeError(f"@given expects strategies, got {s!r}")
+
+    def decorate(fn):
+        sig_params = list(inspect.signature(fn).parameters)
+        pos_names = sig_params[-len(arg_strategies):] if arg_strategies \
+            else []
+        strat_map = dict(zip(pos_names, arg_strategies))
+        strat_map.update(kw_strategies)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = _resolve_max_examples(wrapper, fn)
+            seed = zlib.adler32(
+                f"{fn.__module__}.{fn.__qualname__}".encode())
+            rng = random.Random(seed)
+            names = list(strat_map)
+            boundary_runs = _boundary_examples(strat_map)
+            executed = 0
+            attempts = 0
+            max_attempts = max(n * 10, 50)
+            example_iter = iter(boundary_runs)
+            while executed < n and attempts < max_attempts:
+                attempts += 1
+                drawn = next(example_iter, None)
+                if drawn is None:
+                    drawn = {k: strat_map[k].do_draw(rng) for k in names}
+                try:
+                    fn(*args, **{**kwargs, **drawn})
+                except UnsatisfiedAssumption:
+                    continue
+                except Exception as e:
+                    raise _falsified(fn, drawn, e) from e
+                executed += 1
+            if executed == 0:
+                # mirror real Hypothesis' Unsatisfiable: a test that never
+                # ran must not go green
+                raise AssertionError(
+                    f"{fn.__name__}: assume() rejected all {attempts} "
+                    f"generated examples (shim Unsatisfiable)")
+            return None
+
+        # pytest must not see the strategy-filled parameters (it would hunt
+        # for fixtures of the same name), nor follow __wrapped__ back to fn
+        sig = inspect.signature(fn)
+        remaining = [p for name, p in sig.parameters.items()
+                     if name not in strat_map]
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+
+        # mimic real Hypothesis' attribute layout: pytest plugins (anyio)
+        # introspect obj.hypothesis.inner_test during collection
+        class _HypothesisHandle:
+            inner_test = staticmethod(fn)
+
+        wrapper.hypothesis = _HypothesisHandle()
+        return wrapper
+
+    return decorate
+
+
+def _boundary_examples(strat_map):
+    """Cartesian-free boundary pass: each strategy's extremes, one at a time,
+    with every other argument at its own first boundary value."""
+    names = list(strat_map)
+    base = {k: strat_map[k].boundary()[0] for k in names}
+    out = [dict(base)]
+    for k in names:
+        for v in strat_map[k].boundary()[1:]:
+            ex = dict(base)
+            ex[k] = v
+            out.append(ex)
+    return out
+
+
+def _falsified(fn, drawn, err):
+    args = ", ".join(f"{k}={v!r}" for k, v in drawn.items())
+    return AssertionError(
+        f"Falsifying example (repro shim): {fn.__name__}({args}) "
+        f"raised {type(err).__name__}: {err}")

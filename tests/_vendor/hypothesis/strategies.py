@@ -1,0 +1,172 @@
+"""Strategy objects for the repro hypothesis shim (see package docstring)."""
+from __future__ import annotations
+
+import math
+import random
+from typing import Any, List, Sequence
+
+__all__ = ["SearchStrategy", "integers", "floats", "booleans",
+           "sampled_from", "lists", "tuples", "just"]
+
+
+class SearchStrategy:
+    def do_draw(self, rng: random.Random) -> Any:
+        raise NotImplementedError
+
+    def boundary(self) -> List[Any]:
+        """Deterministic extreme values, tried before random draws; the
+        first element doubles as the strategy's default/base example."""
+        return [self.do_draw(random.Random(0))]
+
+    # real Hypothesis composes strategies with .map/.filter; the suite does
+    # not use them today, but they are cheap to support
+    def map(self, f):
+        return _Mapped(self, f)
+
+    def filter(self, pred):
+        return _Filtered(self, pred)
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, inner, f):
+        self.inner, self.f = inner, f
+
+    def do_draw(self, rng):
+        return self.f(self.inner.do_draw(rng))
+
+    def boundary(self):
+        return [self.f(v) for v in self.inner.boundary()]
+
+
+class _Filtered(SearchStrategy):
+    def __init__(self, inner, pred):
+        self.inner, self.pred = inner, pred
+
+    def do_draw(self, rng):
+        for _ in range(1000):
+            v = self.inner.do_draw(rng)
+            if self.pred(v):
+                return v
+        raise ValueError("filter predicate too restrictive (shim)")
+
+    def boundary(self):
+        vals = [v for v in self.inner.boundary() if self.pred(v)]
+        return vals or [self.do_draw(random.Random(0))]
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value: int, max_value: int):
+        if max_value < min_value:
+            raise ValueError("max_value < min_value")
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def do_draw(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+    def boundary(self):
+        mid = (self.lo + self.hi) // 2
+        return sorted({self.lo, self.hi, mid})
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value: float, max_value: float):
+        if not (math.isfinite(min_value) and math.isfinite(max_value)):
+            raise ValueError("shim floats() requires finite bounds")
+        if max_value < min_value:
+            raise ValueError("max_value < min_value")
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def do_draw(self, rng):
+        return rng.uniform(self.lo, self.hi)
+
+    def boundary(self):
+        out = [self.lo, self.hi, 0.5 * (self.lo + self.hi)]
+        return sorted(set(out))
+
+
+class _Booleans(SearchStrategy):
+    def do_draw(self, rng):
+        return rng.random() < 0.5
+
+    def boundary(self):
+        return [False, True]
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements: Sequence[Any]):
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from of empty sequence")
+
+    def do_draw(self, rng):
+        return rng.choice(self.elements)
+
+    def boundary(self):
+        return self.elements[: min(3, len(self.elements))]
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements: SearchStrategy, min_size=0, max_size=10):
+        self.elements = elements
+        self.min_size, self.max_size = min_size, max_size
+
+    def do_draw(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        return [self.elements.do_draw(rng) for _ in range(n)]
+
+    def boundary(self):
+        base = self.elements.boundary()[0]
+        out = [[base] * self.min_size]
+        if self.max_size != self.min_size:
+            out.append([base] * self.max_size)
+        return out
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, *parts: SearchStrategy):
+        self.parts = parts
+
+    def do_draw(self, rng):
+        return tuple(p.do_draw(rng) for p in self.parts)
+
+    def boundary(self):
+        return [tuple(p.boundary()[0] for p in self.parts)]
+
+
+class _Just(SearchStrategy):
+    def __init__(self, value):
+        self.value = value
+
+    def do_draw(self, rng):
+        return self.value
+
+    def boundary(self):
+        return [self.value]
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return _Integers(min_value, max_value)
+
+
+def floats(min_value: float, max_value: float, **_kw) -> SearchStrategy:
+    return _Floats(min_value, max_value)
+
+
+def booleans() -> SearchStrategy:
+    return _Booleans()
+
+
+def sampled_from(elements) -> SearchStrategy:
+    return _SampledFrom(elements)
+
+
+def lists(elements, min_size=0, max_size=10) -> SearchStrategy:
+    return _Lists(elements, min_size, max_size)
+
+
+def tuples(*parts) -> SearchStrategy:
+    return _Tuples(*parts)
+
+
+def just(value) -> SearchStrategy:
+    return _Just(value)

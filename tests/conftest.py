@@ -1,0 +1,16 @@
+"""Test-suite bootstrap.
+
+* Falls back to the vendored minimal hypothesis shim (tests/_vendor) when
+  the real ``hypothesis`` package is not installed, so the property-test
+  modules collect and run on a bare jax+numpy+pytest container.  Install
+  requirements-dev.txt for full Hypothesis runs (shrinking etc.).
+* Registers the tier marker split (see pytest.ini): ``slow`` tests are the
+  jit/pallas/model-smoke heavyweights; ``-m "not slow"`` is the fast path.
+"""
+import sys
+from pathlib import Path
+
+try:
+    import hypothesis  # noqa: F401  (prefer the real package when present)
+except ImportError:
+    sys.path.insert(0, str(Path(__file__).resolve().parent / "_vendor"))

@@ -11,6 +11,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# model compiles dominate suite wall-clock; excluded from the fast path
+pytestmark = pytest.mark.slow
+
 from repro.configs import (
     ARCH_IDS, SHAPES, get_config, get_smoke, input_specs, shape_applicable,
     smoke_batch,

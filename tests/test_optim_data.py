@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 
 from repro.data import SyntheticLM, host_shard_batch, task_workloads
 from repro.data.streaming import node_count_trace, task_state_sizes

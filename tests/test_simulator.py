@@ -1,0 +1,204 @@
+"""Vectorized simulator tests: differential equivalence against the legacy
+scalar oracle, tuple-conservation invariants across every migration
+strategy, the fluid-dominates-progressive latency property, and the
+chained multi-operator engine."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ElasticPlanner
+from repro.data import node_count_trace, task_state_sizes, task_workloads
+from repro.runtime import (
+    ChainedDataflowSim, ElasticServingSim, SimConfig, StageSpec,
+    VectorizedServingSim, weighted_percentile,
+)
+
+MODES = ("kill_restart", "live", "progressive", "fluid")
+
+
+def _metrics_matrix(mets):
+    return np.array([[x.mean_response_s, x.max_response_s, x.delivered,
+                      x.dropped_capacity, x.migration_duration_s,
+                      x.forwarded, x.migration_cost_bytes] for x in mets])
+
+
+def _mk_trace(m, T, seed, n_lo=4, n_hi=8, state_scale=2000.0):
+    w = task_workloads(m, T, seed=seed)
+    s = task_state_sizes(w) * state_scale
+    trace = node_count_trace(w, n_lo, n_hi)
+    return w, s, trace
+
+
+# ---------------------------------------------------------------------------
+# Differential: vectorized engine == scalar oracle, all strategies
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+def test_vectorized_matches_scalar_oracle(mode):
+    m, T = 32, 20
+    w, s, trace = _mk_trace(m, T, seed=5)
+    sim = SimConfig()
+    scalar = ElasticServingSim(m, sim, ElasticPlanner(policy="ssm"),
+                               mode=mode)
+    vector = VectorizedServingSim(m, sim, ElasticPlanner(policy="ssm"),
+                                  mode=mode)
+    a = _metrics_matrix(scalar.run(w, s, trace))
+    b = _metrics_matrix(vector.run(w, s, trace))
+    # identical delivered-tuple counts and per-interval latency profile
+    np.testing.assert_allclose(a, b, rtol=1e-9, atol=1e-9)
+
+
+@given(m=st.integers(8, 40), seed=st.integers(0, 500),
+       n_lo=st.integers(2, 4), span=st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_vectorized_matches_scalar_oracle_property(m, seed, n_lo, span):
+    w, s, trace = _mk_trace(m, 10, seed=seed, n_lo=n_lo, n_hi=n_lo + span)
+    sim = SimConfig(slots_per_interval=20)
+    for mode in ("live", "fluid"):
+        a = _metrics_matrix(ElasticServingSim(
+            m, sim, ElasticPlanner(policy="ssm"), mode=mode).run(w, s, trace))
+        b = _metrics_matrix(VectorizedServingSim(
+            m, sim, ElasticPlanner(policy="ssm"), mode=mode).run(w, s, trace))
+        np.testing.assert_allclose(a, b, rtol=1e-9, atol=1e-9)
+
+
+def test_jax_backend_matches_numpy():
+    m, T = 32, 10
+    w, s, trace = _mk_trace(m, T, seed=3)
+    sim = SimConfig()
+    a = VectorizedServingSim(m, sim, ElasticPlanner(policy="ssm"),
+                             mode="fluid")
+    b = VectorizedServingSim(m, sim, ElasticPlanner(policy="ssm"),
+                             mode="fluid", backend="jax")
+    ma = _metrics_matrix(a.run(w, s, trace))
+    mb = _metrics_matrix(b.run(w, s, trace))
+    # f32 accumulation on the jit path: loose tolerance
+    np.testing.assert_allclose(ma, mb, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Conservation: no tuple lost or duplicated under any strategy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+def test_tuple_conservation(mode):
+    m, T = 24, 16
+    w, s, trace = _mk_trace(m, T, seed=9)
+    sv = VectorizedServingSim(m, SimConfig(), ElasticPlanner(policy="ssm"),
+                              mode=mode)
+    mets = sv.run(w, s, trace)
+    delivered = sum(x.delivered for x in mets)
+    backlog = mets[-1].dropped_capacity
+    np.testing.assert_allclose(delivered + backlog, w.sum(), rtol=1e-9)
+    # per-interval non-negativity
+    assert all(x.delivered >= 0 for x in mets)
+    assert all(x.dropped_capacity >= -1e-9 for x in mets)
+
+
+# ---------------------------------------------------------------------------
+# Fluid property: max latency spike <= progressive's on identical traces
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 200))
+@settings(max_examples=8, deadline=None)
+def test_fluid_spike_bounded_by_progressive(seed):
+    m, T = 32, 12
+    w = task_workloads(m, T, seed=seed, burst_prob=0.0, diurnal_amp=0.05,
+                       zipf_a=0.5)
+    s = task_state_sizes(w) * 3000.0
+    trace = np.array([8] * (T // 2) + [6] * (T - T // 2))
+    sim = SimConfig(interval_s=60.0)
+    spikes = {}
+    for mode in ("progressive", "fluid"):
+        sv = VectorizedServingSim(m, sim, ElasticPlanner(policy="ssm"),
+                                  mode=mode, tau=0.6)
+        mets = sv.run(w, s, trace)
+        spikes[mode] = max(x.max_response_s for x in mets)
+    assert spikes["fluid"] <= spikes["progressive"] + 1e-9
+
+
+def test_fluid_batch_interpolates_to_progressive():
+    """fluid_batch=max_inflight with window-start 0 is progressive; a huge
+    batch recovers live's single phase.  Here: larger batches must not
+    shrink the worst spike below the batch=1 fluid run."""
+    m, T = 32, 12
+    w, s, trace = _mk_trace(m, T, seed=4, state_scale=3000.0)
+    sim = SimConfig(interval_s=60.0)
+    spikes = []
+    for batch in (1, 4, 10_000):
+        sv = VectorizedServingSim(m, sim, ElasticPlanner(policy="ssm"),
+                                  mode="fluid", fluid_batch=batch, tau=0.6)
+        mets = sv.run(w, s, trace)
+        spikes.append(max(x.max_response_s for x in mets))
+    assert spikes[0] <= spikes[1] + 1e-9
+    assert spikes[0] <= spikes[2] + 1e-9
+
+
+def test_weighted_percentile():
+    v = np.array([1.0, 2.0, 3.0, 4.0])
+    wt = np.array([1.0, 1.0, 1.0, 97.0])
+    assert weighted_percentile(v, wt, 50) == 4.0
+    assert weighted_percentile(v, wt, 1) == 1.0
+    assert weighted_percentile(np.zeros(0), np.zeros(0), 99) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Chained multi-operator dataflow
+# ---------------------------------------------------------------------------
+
+def test_chain_single_stage_equals_solo_engine():
+    m, T = 32, 10
+    w, s, trace = _mk_trace(m, T, seed=11)
+    sim = SimConfig()
+    chain = ChainedDataflowSim(m, sim, [
+        StageSpec("solo", mode="fluid", tau=0.4,
+                  planner=ElasticPlanner(policy="ssm"))])
+    per_stage = chain.run(w, s, trace)
+    solo = VectorizedServingSim(m, sim, ElasticPlanner(policy="ssm"),
+                                mode="fluid", tau=0.4)
+    mets = solo.run(w, s, trace)
+    a = _metrics_matrix(per_stage[0])
+    b = _metrics_matrix(mets)
+    np.testing.assert_allclose(a[:, :4], b[:, :4], rtol=1e-9, atol=1e-9)
+
+
+def test_chain_conserves_tuples_across_stages():
+    m, T = 32, 12
+    w, s, trace = _mk_trace(m, T, seed=2)
+    sim = SimConfig()
+    chain = ChainedDataflowSim(m, sim, [
+        StageSpec("map", mode="live"),
+        StageSpec("aggregate", mode="fluid", route_seed=3),
+        StageSpec("join", mode="progressive", route_seed=7,
+                  state_scale=2.0),
+    ])
+    per_stage = chain.run(w, s, trace)
+    # stage 0 consumes the external stream
+    d0 = sum(x.delivered for x in per_stage[0])
+    np.testing.assert_allclose(d0 + chain.final_queues[0].sum(), w.sum(),
+                               rtol=1e-9)
+    # each downstream stage consumes exactly what upstream delivered
+    for i in (1, 2):
+        di = sum(x.delivered for x in per_stage[i])
+        up = sum(x.delivered for x in per_stage[i - 1])
+        np.testing.assert_allclose(
+            di + chain.final_queues[i].sum() + chain.final_inflow[i].sum(),
+            up, rtol=1e-9)
+
+
+def test_chain_migrations_overlap_across_stages():
+    """Stages migrate independently: a node-count change hits every stage in
+    the same interval, and each stage's windows are its own."""
+    m, T = 24, 8
+    w, s, trace = _mk_trace(m, T, seed=6, state_scale=3000.0)
+    trace = np.array([6] * 4 + [4] * 4)
+    chain = ChainedDataflowSim(m, SimConfig(interval_s=60.0), [
+        StageSpec("a", mode="fluid"),
+        StageSpec("b", mode="progressive", route_seed=5),
+    ])
+    per_stage = chain.run(w, s, trace)
+    costs = [[x.migration_cost_bytes for x in stage] for stage in per_stage]
+    # both stages migrated at t=4, concurrently
+    assert costs[0][4] > 0 and costs[1][4] > 0
+    e2e = chain.end_to_end_latency(per_stage)
+    assert e2e.shape == (T,) and (e2e > 0).all()

@@ -3,6 +3,9 @@ elastic serving transparency, compressed-gradient training step."""
 import numpy as np
 import pytest
 
+# jit train-step compiles dominate wall-clock; excluded from the fast path
+pytestmark = pytest.mark.slow
+
 import jax
 import jax.numpy as jnp
 
