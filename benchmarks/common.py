@@ -12,8 +12,10 @@ grid coarsening is a measured-loss approximation, see fig6).
 """
 from __future__ import annotations
 
+import json
 import time
 from dataclasses import dataclass
+from pathlib import Path
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -120,6 +122,22 @@ def build_pmc(w, s, trace, tau: float, gamma: float = 0.8,
     res = pmc(table, s_avg, mtm, gamma, **kwargs)
     precompute_s = time.perf_counter() - t0
     return res, precompute_s
+
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def write_bench_json(name: str, payload: Dict) -> Path:
+    """Persist a machine-readable benchmark artifact as
+    ``BENCH_<name>.json`` at the repo root (the stdout CSV is for humans,
+    this file is for tooling/regression tracking).  Overwrites atomically
+    so a crashed run never leaves a torn file."""
+    path = REPO_ROOT / f"BENCH_{name}.json"
+    tmp = path.with_suffix(".json.tmp")
+    tmp.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    tmp.replace(path)
+    print(f"wrote {path.name}")
+    return path
 
 
 def emit(rows: List[Tuple], header: Tuple) -> List[Dict]:

@@ -1,20 +1,102 @@
 """Paper Fig. 5: τ vs SSM planning time (the online path must be fast —
-the paper reports <2 ms at m=64)."""
+the paper reports <2 ms at m=64), plus the backend scaling study:
+plan time vs m for the numpy (paper Fig. 14 verbatim) and jit
+(core/ssm_jit lax.scan) backends, persisted to BENCH_ssm.json.
+
+Default mode keeps the sweep small enough for the full benchmark drive;
+``SSM_BENCH_FULL=1`` adds the m=10,000 numpy-vs-jit headline comparison
+(numpy takes ~390 s there — the jit target is ≥50× faster) and an
+m=100,000 jit-only plan."""
+import os
+import time
+
 import numpy as np
 
-from .common import M_FULL, N_HI, N_LO, emit, run_policy_over_trace, stream
+from repro.core.intervals import Assignment
+from repro.core.ssm import ssm
+
+from .common import (
+    M_FULL, N_LO, N_HI, emit, run_policy_over_trace, stream,
+    write_bench_json,
+)
 
 TAUS = (0.4, 0.6, 0.8, 1.2, 1.6)
+M_SWEEP = (256, 512, 1024)
+M_HEADLINE = 10_000
+M_JIT_ONLY = 100_000
+
+
+def scaling_instance(m: int, n_old: int = 12, n_new: int = 16,
+                     tau: float = 0.4, seed: int = 0):
+    """The fixed benchmark instance family (same generator at every m, so
+    timings are comparable across runs and sessions)."""
+    rng = np.random.default_rng(seed)
+    bs = np.linspace(0, m, n_old + 1).round().astype(int)
+    old = Assignment(m, tuple((int(bs[i]), int(bs[i + 1]))
+                              for i in range(n_old)))
+    w = rng.uniform(0.2, 2.0, size=m)
+    s = rng.uniform(0.1, 3.0, size=m)
+    return old, n_new, w, s, tau
+
+
+def time_backend(backend: str, m: int, repeats: int = 2):
+    """(first_s, steady_s, gain) — first call includes jit compilation."""
+    inst = scaling_instance(m)
+    t0 = time.perf_counter()
+    plan = ssm(*inst, backend=backend)
+    first = time.perf_counter() - t0
+    steady = first
+    for _ in range(repeats - 1):
+        t0 = time.perf_counter()
+        plan = ssm(*inst, backend=backend)
+        steady = time.perf_counter() - t0
+    return first, steady, float(plan.gain)
 
 
 def main():
+    # paper figure: τ sweep at protocol scale (m=64, python-loop budget)
     w, s, trace = stream(M_FULL, N_LO, N_HI)
     rows = []
     for tau in TAUS:
         res = run_policy_over_trace("ssm", w, s, trace, tau)
         rows.append((tau, round(res["avg_plan_ms"], 3), res["migrations"]))
     out = emit(rows, ("tau", "ssm_plan_ms", "migrations"))
-    assert all(r["ssm_plan_ms"] < 1000.0 for r in out)  # python-loop budget
+    assert all(r["ssm_plan_ms"] < 1000.0 for r in out)
+
+    # backend scaling: plan time vs m, both backends on one instance family
+    full = os.environ.get("SSM_BENCH_FULL", "") == "1"
+    records = []
+    for m in M_SWEEP + ((M_HEADLINE,) if full else ()):
+        gains = {}
+        for backend in ("numpy", "jit"):
+            first, steady, gain = time_backend(backend, m)
+            gains[backend] = gain
+            records.append({"m": m, "backend": backend,
+                            "first_s": round(first, 4),
+                            "steady_s": round(steady, 4),
+                            "gain": gain})
+        assert abs(gains["numpy"] - gains["jit"]) <= \
+            1e-9 * max(1.0, abs(gains["numpy"])), (m, gains)
+    if full:
+        first, steady, gain = time_backend("jit", M_JIT_ONLY, repeats=1)
+        records.append({"m": M_JIT_ONLY, "backend": "jit",
+                        "first_s": round(first, 4),
+                        "steady_s": round(steady, 4), "gain": gain})
+        np_10k = next(r["steady_s"] for r in records
+                      if r["m"] == M_HEADLINE and r["backend"] == "numpy")
+        jit_10k = next(r["steady_s"] for r in records
+                       if r["m"] == M_HEADLINE and r["backend"] == "jit")
+        assert jit_10k * 50 <= np_10k, (np_10k, jit_10k)
+    emit([(r["m"], r["backend"], r["first_s"], r["steady_s"])
+          for r in records],
+         ("m", "backend", "first_s", "steady_s"))
+    write_bench_json("ssm", {
+        "mode": "full" if full else "fast",
+        "instance": {"n_old": 12, "n_new": 16, "tau": 0.4, "seed": 0,
+                     "w": "U(0.2,2.0)", "s": "U(0.1,3.0)"},
+        "plan_time_vs_m": records,
+        "tau_sweep_m64": out,
+    })
     return out
 
 

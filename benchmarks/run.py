@@ -13,7 +13,9 @@ import traceback
 SUITES = [
     ("table1", "Table 1 — motivating sequence example"),
     ("fig4_cost_vs_tau", "Fig. 4 — τ vs migration cost (adhoc/SSM/MTM)"),
-    ("fig5_ssm_runtime", "Fig. 5 — τ vs SSM planning time"),
+    ("fig5_ssm_runtime",
+     "Fig. 5 — τ vs SSM planning time + numpy/jit backend scaling"),
+    ("ssm_oracles", "Differential harness — all SSM solvers must agree"),
     ("fig6_pmc_time", "Fig. 6 — τ vs PMC precompute time"),
     ("fig7_tasks_m", "Fig. 7 — #tasks m vs cost & runtime"),
     ("fig8_window_response", "Fig. 8 — window size vs response time"),
@@ -30,7 +32,17 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     args = ap.parse_args(argv)
-    only = set(args.only.split(",")) if args.only else None
+    only = None
+    if args.only:
+        only = {name for name in args.only.split(",") if name}
+        known = {mod_name for mod_name, _ in SUITES}
+        unknown = sorted(only - known)
+        if unknown:
+            raise SystemExit(
+                f"--only: unknown suite(s) {unknown}; choose from "
+                f"{sorted(known)}")
+        if not only:
+            raise SystemExit("--only: no suites selected")
     failures = []
     for mod_name, title in SUITES:
         if only and mod_name not in only:

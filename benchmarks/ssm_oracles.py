@@ -1,0 +1,144 @@
+"""Differential oracle harness: every SSM solver, one instance stream.
+
+All exact solvers in the repo answer the same randomized instances through
+one comparison loop (the ilp/cp/brute cost-dict idiom), and must agree —
+on *feasibility* exactly, and on the optimal gain to 1e-9 relative:
+
+    brute      boundary-multiset enumeration + bitmask matching (tiny m)
+    simple     Simple_SSM O(m²·n·n') reference DP (paper Fig. 12 analogue)
+    ssm_numpy  production DP, numpy backend (paper Fig. 14 verbatim)
+    ssm_jit    production DP, jit-compiled lax.scan backend (core/ssm_jit)
+
+The stream mixes tiny instances (all four solvers), mid-size ones (brute
+excluded by its own size guard), crafted cap-boundary cases (a task weight
+exactly equal to the cap (1+τ)W/n′ — the Infeasible-consistency bugs lived
+here) and min-cover infeasibilities.  ``scripts/ci.sh fast`` runs this
+harness after the fast pytest tier; tests/test_ssm_jit.py runs it in-suite.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.intervals import Assignment
+from repro.core.ssm import Infeasible, brute_force, simple_ssm, ssm
+
+INFEASIBLE = "INFEASIBLE"
+RTOL = 1e-9
+
+SOLVERS = {
+    "brute": brute_force,
+    "simple": simple_ssm,
+    "ssm_numpy": functools.partial(ssm, backend="numpy"),
+    "ssm_jit": functools.partial(ssm, backend="jit"),
+}
+
+
+def random_instance(rng: np.random.Generator, tiny: bool):
+    if tiny:
+        m = int(rng.integers(4, 13))
+        n_old = int(rng.integers(1, min(5, m) + 1))
+        n_new = int(rng.integers(1, 5))
+    else:
+        m = int(rng.integers(16, 200))
+        n_old = int(rng.integers(1, 13))
+        n_new = int(rng.integers(1, 13))
+    w = rng.uniform(0.2, 2.0, m)
+    if rng.random() < 0.3:                      # hot task
+        w[rng.integers(0, m)] *= float(rng.uniform(3, 12))
+    if rng.random() < 0.3:                      # dead tasks
+        w[rng.random(m) < 0.2] = 0.0
+    s = rng.uniform(0.1, 3.0, m)
+    cuts = np.sort(rng.choice(np.arange(1, m), min(n_old - 1, m - 1),
+                              replace=False))
+    bounds = [0, *[int(c) for c in cuts], m]
+    old = Assignment.from_boundaries(m, bounds)
+    tau = float(rng.choice([0.1, 0.25, 0.4, 0.8, 1.6]))
+    return old, n_new, w, s, tau
+
+
+def crafted_instances() -> List[Tuple]:
+    """Cap-boundary cases: every solver must call feasibility the same way."""
+    out = []
+    # single task weight exactly equal to the cap (1+τ)W/n′:
+    # W=8, n′=2, τ=0.25 → cap = 5.0 = w[0]; feasible only with tolerance,
+    # and then for ALL solvers at once
+    w = np.array([5.0, 1.0, 1.0, 1.0])
+    s = np.array([2.0, 1.0, 1.0, 1.0])
+    old = Assignment.from_boundaries(4, [0, 2, 4])
+    out.append((old, 2, w, s, 0.25))
+    # a single task strictly above any cap → everyone Infeasible
+    out.append((old, 2, np.array([50.0, 1.0, 1.0, 1.0]), s, 0.25))
+    # n′ < min cover count: W=21, n′=2, τ=0 → cap 10.5 fits at most 3 tasks
+    # (9.0) per interval, so covering 7 tasks needs ≥3 intervals
+    w3 = np.full(7, 3.0)
+    old3 = Assignment.from_boundaries(7, [0, 3, 7])
+    out.append((old3, 2, w3, np.ones(7), 0.0))
+    # all-zero weights: cap 0 but every interval weighs 0 → feasible
+    out.append((Assignment.from_boundaries(3, [0, 3]), 2,
+                np.zeros(3), np.array([1.0, 2.0, 3.0]), 0.4))
+    return out
+
+
+def _answer(fn, inst):
+    try:
+        return float(fn(*inst).gain)
+    except Infeasible:
+        return INFEASIBLE
+
+
+def _agrees(got, ref) -> bool:
+    if (got == INFEASIBLE) != (ref == INFEASIBLE):
+        return False
+    return got == INFEASIBLE or \
+        abs(got - ref) <= RTOL * max(1.0, abs(ref))
+
+
+def run(n_tiny: int = 20, n_big: int = 32, seed: int = 0,
+        verbose: bool = True) -> Dict[str, List]:
+    rng = np.random.default_rng(seed)
+    gains: Dict[str, List] = defaultdict(list)
+    times: Dict[str, float] = defaultdict(float)
+    bad: List[str] = []
+    instances = [(True, random_instance(rng, True)) for _ in range(n_tiny)]
+    instances += [(False, random_instance(rng, False))
+                  for _ in range(n_big)]
+    instances += [(inst[0].m <= 20, inst) for inst in crafted_instances()]
+    for i, (tiny, inst) in enumerate(instances):
+        answers = {}
+        for name, fn in SOLVERS.items():
+            if name == "brute" and not tiny:
+                continue
+            t0 = time.perf_counter()
+            answers[name] = _answer(fn, inst)
+            times[name] += time.perf_counter() - t0
+            gains[name].append(answers[name])
+        ref = answers["simple"]
+        for name, got in answers.items():
+            if not _agrees(got, ref):
+                bad.append(f"instance {i} ({'tiny' if tiny else 'big'}, "
+                           f"m={inst[0].m}, n'={inst[1]}, tau={inst[4]}): "
+                           f"{name}={got} vs simple={ref}")
+    n_inf = sum(1 for g in gains["simple"] if g == INFEASIBLE)
+    if verbose:
+        print(f"ssm_oracles: {len(instances)} instances "
+              f"({n_inf} infeasible), solvers agree on feasibility and "
+              f"gain @ rtol {RTOL}")
+        for name in SOLVERS:
+            print(f"  {name:10s} answered {len(gains[name]):3d} "
+                  f"in {times[name]:6.2f}s")
+    if bad:
+        raise AssertionError("oracle disagreement:\n" + "\n".join(bad))
+    return gains
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

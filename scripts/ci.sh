@@ -13,6 +13,9 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-}" == "fast" ]]; then
-    exec python -m pytest -x -q -m "not slow"
+    python -m pytest -x -q -m "not slow"
+    # differential gate: every SSM solver (brute/simple/numpy/jit) must
+    # agree on feasibility and optimal gain across the randomized stream
+    exec python -m benchmarks.ssm_oracles
 fi
 exec python -m pytest -x -q

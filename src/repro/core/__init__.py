@@ -11,6 +11,7 @@ Public API:
 from .intervals import (
     Assignment,
     balance_cap,
+    feasible_tol,
     migration_cost,
     migration_gain,
     moved_tasks,
@@ -24,8 +25,8 @@ from .baselines import CHashResult, adhoc, consistent_hashing, greedy_trim
 from .planner import ElasticPlanner, TauSchedule
 
 __all__ = [
-    "Assignment", "balance_cap", "migration_cost", "migration_gain",
-    "moved_tasks", "prefix_sum", "satisfies_balance",
+    "Assignment", "balance_cap", "feasible_tol", "migration_cost",
+    "migration_gain", "moved_tasks", "prefix_sum", "satisfies_balance",
     "Infeasible", "MigrationPlan", "brute_force", "simple_ssm", "ssm",
     "SequenceResult", "greedy_sequence", "oms",
     "MTM", "PMCResult", "PartitionTable", "mtm_aware_plan",

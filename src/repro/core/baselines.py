@@ -22,7 +22,14 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from .intervals import Assignment, balance_cap, prefix_sum, _EPS
+from .intervals import (
+    Assignment,
+    balance_cap,
+    feasible_tol,
+    max_feasible_ends,
+    min_feasible_starts,
+    prefix_sum,
+)
 from .ssm import Infeasible, MigrationPlan, _plan
 
 
@@ -47,15 +54,14 @@ def greedy_trim(
     w = np.asarray(w, dtype=np.float64)
     Sw = prefix_sum(w)
     cap = balance_cap(float(Sw[-1]), n_new, tau)
-    tol = cap * (1 + _EPS) + _EPS
+    tol = feasible_tol(cap)
     old_items = old.nonempty()
     old_bounds = [iv[1] for _, iv in old_items][: n_new - 1]
     bounds = [0]
     for i in range(n_new - 1):
         lo = bounds[-1]
-        # largest feasible hi
-        hi_max = int(np.searchsorted(Sw, Sw[lo] + tol, side="right") - 1)
-        hi_max = max(hi_max, lo)
+        # largest feasible hi (canonical predicate — matches ssm/next_jump)
+        hi_max = int(max_feasible_ends(Sw, tol, np.array([lo]))[0])
         want = old_bounds[i] if i < len(old_bounds) else hi_max
         hi = min(max(want, lo), hi_max, m)
         bounds.append(hi)
@@ -64,7 +70,7 @@ def greedy_trim(
         # tail overloaded: fall back to right-to-left repair
         for i in range(n_new - 1, 0, -1):
             hi = bounds[i + 1]
-            lo_min = int(np.searchsorted(Sw, Sw[hi] - tol, side="left"))
+            lo_min = int(min_feasible_starts(Sw, tol, np.array([hi]))[0])
             if bounds[i] < lo_min:
                 bounds[i] = lo_min
         if any(Sw[bounds[i + 1]] - Sw[bounds[i]] > tol for i in range(n_new)):

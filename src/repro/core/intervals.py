@@ -26,6 +26,20 @@ Interval = Tuple[int, int]
 _EPS = 1e-9
 
 
+def feasible_tol(cap: float) -> float:
+    """Canonical feasibility tolerance for the balance cap.
+
+    An interval [a, b) fits the cap iff ``Sw[b] - Sw[a] <= feasible_tol(cap)``
+    — *this exact expression*, prefix-sum difference against this exact
+    tolerance.  Every feasibility decision in the planner must go through this
+    predicate: a running-sum accumulator (``acc += w[b]``) rounds differently
+    from ``Sw[b] - Sw[a]`` by a few ulps, which is enough to make two solvers
+    disagree on feasibility when a single task weighs exactly ``(1+tau)W/n'``
+    (the Infeasible-inconsistency bug this helper fixes).
+    """
+    return cap * (1 + _EPS) + _EPS
+
+
 def prefix_sum(v: np.ndarray) -> np.ndarray:
     """Length m+1 prefix sums with S[0] = 0; measure of [lo,hi) = S[hi]-S[lo]."""
     v = np.asarray(v, dtype=np.float64)
@@ -157,35 +171,72 @@ def satisfies_balance(
     else:
         bs = list(assignment_or_bounds)
         ivs = [(bs[i], bs[i + 1]) for i in range(len(bs) - 1)]
-    return all(measure(Sw, lo, hi) <= cap * (1 + _EPS) + _EPS for lo, hi in ivs)
+    tol = feasible_tol(cap)
+    return all(measure(Sw, lo, hi) <= tol for lo, hi in ivs)
 
 
 # ---------------------------------------------------------------------------
 # Greedy covers (used by SSM for n_min and zero-gain filler construction).
 # ---------------------------------------------------------------------------
 
+def max_feasible_ends(Sw: np.ndarray, tol: float,
+                      starts: np.ndarray) -> np.ndarray:
+    """b[i] = largest b in [starts[i], m] with Sw[b] - Sw[starts[i]] <= tol.
+
+    Vectorized: a searchsorted estimate (which evaluates ``Sw[a] + tol``, a
+    *different* float expression) corrected by +-1 steps against the canonical
+    predicate, so the result is exact w.r.t. ``Sw[b] - Sw[a] <= tol``.
+    """
+    starts = np.asarray(starts, dtype=np.int64)
+    m = len(Sw) - 1
+    b = np.searchsorted(Sw, Sw[starts] + tol, side="right") - 1
+    b = np.clip(b, starts, m)
+    while True:
+        over = (b > starts) & (Sw[b] - Sw[starts] > tol)
+        if not over.any():
+            break
+        b[over] -= 1
+    while True:
+        under = (b < m) & (Sw[np.minimum(b + 1, m)] - Sw[starts] <= tol)
+        if not under.any():
+            break
+        b[under] += 1
+    return b
+
+
+def min_feasible_starts(Sw: np.ndarray, tol: float,
+                        ends: np.ndarray) -> np.ndarray:
+    """a[i] = smallest a in [0, ends[i]] with Sw[ends[i]] - Sw[a] <= tol.
+
+    Dual of :func:`max_feasible_ends`; same canonical-predicate correction.
+    """
+    ends = np.asarray(ends, dtype=np.int64)
+    a = np.searchsorted(Sw, Sw[ends] - tol, side="left")
+    a = np.clip(a, 0, ends)
+    while True:
+        over = (a < ends) & (Sw[ends] - Sw[a] > tol)
+        if not over.any():
+            break
+        a[over] += 1
+    while True:
+        under = (a > 0) & (Sw[ends] - Sw[np.maximum(a - 1, 0)] <= tol)
+        if not under.any():
+            break
+        a[under] -= 1
+    return a
+
+
 def next_jump(w: np.ndarray, cap: float) -> np.ndarray:
     """nxt[a] = largest b (a <= b <= m) with weight([a,b)) <= cap.
 
-    Two-pointer, O(m).  nxt[a] == a means task a alone exceeds the cap, which
-    makes any contiguous partition infeasible.
+    nxt[a] == a means task a alone exceeds the cap, which makes any
+    contiguous partition infeasible.  Uses the canonical prefix-sum predicate
+    (``feasible_tol``) so it agrees bit-for-bit with every other feasibility
+    check in the planner.
     """
     m = len(w)
-    nxt = np.zeros(m + 1, dtype=np.int64)
-    nxt[m] = m
-    b = 0
-    acc = 0.0
-    tol = cap * (1 + _EPS) + _EPS
-    for a in range(m):
-        if b < a:
-            b = a
-            acc = 0.0
-        while b < m and acc + w[b] <= tol:
-            acc += w[b]
-            b += 1
-        nxt[a] = b
-        acc -= w[a]
-    return nxt
+    Sw = prefix_sum(w)
+    return max_feasible_ends(Sw, feasible_tol(cap), np.arange(m + 1))
 
 
 def min_cover_counts(nxt: np.ndarray) -> np.ndarray:
@@ -227,8 +278,7 @@ def enumerate_balanced_partitions(
     [0, m) into exactly k nonempty intervals."""
     m = len(w)
     Sw = prefix_sum(w)
-    cap = balance_cap(float(Sw[-1]), k, tau)
-    tol = cap * (1 + _EPS) + _EPS
+    tol = feasible_tol(balance_cap(float(Sw[-1]), k, tau))
     count = 0
 
     def rec(start: int, parts_left: int, acc: Tuple[int, ...]):
@@ -253,8 +303,7 @@ def count_balanced_partitions(w: np.ndarray, k: int, tau: float) -> int:
     """DP count of cap-feasible partitions into k nonempty intervals."""
     m = len(w)
     Sw = prefix_sum(w)
-    cap = balance_cap(float(Sw[-1]), k, tau)
-    tol = cap * (1 + _EPS) + _EPS
+    tol = feasible_tol(balance_cap(float(Sw[-1]), k, tau))
     # cnt[j][b] = #ways to split [0, b) into j feasible intervals
     cnt = np.zeros((k + 1, m + 1), dtype=np.int64)
     cnt[0][0] = 1

@@ -36,6 +36,7 @@ import numpy as np
 from .intervals import (
     Assignment,
     balance_cap,
+    feasible_tol,
     match_gain,
     measure,
     prefix_sum,
@@ -108,8 +109,7 @@ def grid_partitions(
     boundaries are multiples of ``grid`` (grid=1 reproduces the full space)."""
     m = len(w)
     Sw = prefix_sum(w)
-    cap = balance_cap(float(Sw[-1]), k, tau)
-    tol = cap * (1 + _EPS) + _EPS
+    tol = feasible_tol(balance_cap(float(Sw[-1]), k, tau))
     pts = [b for b in range(grid, m, grid)] + [m]
     out: List[Tuple[int, ...]] = []
 
@@ -155,7 +155,7 @@ class PartitionTable:
 
     def feasible_rows(self, k: int) -> np.ndarray:
         """Rows usable as the target of a migration onto k nodes."""
-        cap = balance_cap(self.total_w, k, self.tau) * (1 + _EPS) + _EPS
+        cap = feasible_tol(balance_cap(self.total_w, k, self.tau))
         counts = np.asarray(self.n_counts)
         return np.nonzero((counts <= k) & (self.max_load <= cap))[0]
 
@@ -347,12 +347,24 @@ def mtm_aware_plan(
     n_new: int,
     s: np.ndarray,
     pmc_result: PMCResult,
+    gain_fn=None,
 ) -> MigrationPlan:
     """Definition 2.8: minimize immediate cost + gamma * projected cost.
 
     Immediate cost is computed against the *concrete* old assignment (its
     node ids matter for the first hop); the projected cost is a pure function
     of the target partition (Lemma 4.2), looked up from the PMC table.
+
+    ``gain_fn`` (same signature as ``pairwise_gain_matrix``; pass
+    ``kernels.ops.pairwise_gain`` — interpret=True Pallas on CPU, native on
+    TPU) batches the old-vs-candidate interval-gain scoring, the inner loop
+    of this planner.  The kernel scores in f32, so it is used to *prune*:
+    only candidates within a conservative error margin of the best f32 value
+    are re-scored with the exact f64 ``match_gain``, in ascending row order,
+    preserving the exact tie-break of the pure-python path bit-for-bit.
+    The f32 DP accumulates ≤ K adds/maxes of values bounded by total_state,
+    so |g32 − g64| ≤ K·eps32·total_state ≈ 1e-5·total_state at K=64; the
+    margin below is two orders of magnitude wider.
     """
     table = pmc_result.table
     idx = table.feasible_rows(n_new)
@@ -363,6 +375,16 @@ def mtm_aware_plan(
     total_state = float(Ss[-1])
     old_items = old.nonempty()
     ki = n_new - pmc_result.mtm.n_min
+    if gain_fn is not None and len(idx) > 1:
+        a_bounds = np.concatenate(
+            [[iv[0] for _, iv in old_items], [old.m]]).astype(np.int64)
+        g32 = np.asarray(
+            gain_fn(a_bounds[None, :], table.bounds[idx], Ss),
+            dtype=np.float64)[0]
+        val32 = (total_state - g32) + pmc_result.gamma * \
+            pmc_result.values[idx, ki]
+        margin = 1e-3 * max(1.0, total_state)
+        idx = idx[val32 <= float(val32.min()) + margin]
     best_val, best_row = np.inf, -1
     for row in idx:
         bounds = [int(b) for b in table.bounds[row]]

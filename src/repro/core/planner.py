@@ -3,7 +3,10 @@
 A planner turns (current assignment, target node count, workload/state
 statistics) into a MigrationPlan.  Policies:
 
-    ssm     exact optimal single-step migration (paper §3, production default)
+    ssm        exact optimal single-step migration (paper §3, production
+               default; backend="auto" — jit DP above _AUTO_JIT_MIN_M tasks)
+    ssm_jit    same optimum, forced jit-compiled lax.scan DP (core/ssm_jit)
+    ssm_numpy  same optimum, forced reference numpy DP (paper Fig. 14)
     mtm     MTM-aware: immediate + gamma-discounted projected cost (paper §4.2)
     simple  Simple_SSM oracle (paper Fig. 12 equivalent; small instances)
     adhoc   Storm-default analogue (paper's baseline)
@@ -15,6 +18,7 @@ controller (runtime/elastic.py).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence
 
@@ -29,6 +33,8 @@ Policy = Callable[[Assignment, int, np.ndarray, np.ndarray, float], MigrationPla
 
 POLICIES = {
     "ssm": ssm,
+    "ssm_jit": functools.partial(ssm, backend="jit"),
+    "ssm_numpy": functools.partial(ssm, backend="numpy"),
     "simple": simple_ssm,
     "adhoc": adhoc,
     "greedy": greedy_trim,
@@ -65,6 +71,9 @@ class ElasticPlanner:
     # a pre-built PMC table (offline phase output); when set, "mtm" planning
     # uses it directly instead of rebuilding per workload snapshot
     fixed_pmc: Optional[PMCResult] = None
+    # batched gain backend for mtm_aware_plan's scoring loop (e.g.
+    # kernels.ops.pairwise_gain to route it through the Pallas kernel)
+    mtm_gain_fn: Optional[Callable] = None
     _pmc: Optional[PMCResult] = None
     _pmc_key: Optional[tuple] = None
 
@@ -114,7 +123,8 @@ class ElasticPlanner:
                     w, s, min(n_old, n_new),
                     max(n_old, n_new,
                         self.mtm.n_max if self.mtm else n_new), tau=t)
-            return mtm_aware_plan(old, n_new, s, res)
+            return mtm_aware_plan(old, n_new, s, res,
+                                  gain_fn=self.mtm_gain_fn)
         fn = POLICIES.get(self.policy)
         if fn is None:
             raise ValueError(f"unknown policy {self.policy!r}")

@@ -1,0 +1,361 @@
+"""JIT backend for the SSM planner (``ssm(..., backend="jit")``).
+
+The numpy reference (Fig. 14, ``ssm._ssm_numpy``) evaluates, at every DP
+state x0, *bundled* transitions "n_min−1 greedy fillers + one gaining
+interval ending at any x ∈ (x0, m]" — an O(m) successor sweep per state that
+cannot be expressed as a fixed-shape jax op.  This module reformulates the
+recurrence as a *one-jump step-DP* with single-step transitions only:
+
+    G[p, j, k] = max gain partitioning suffix [p, m) into ≤ k cap-feasible
+                 intervals, gaining nodes restricted to positions
+                 ≥ node_of(p) + j (the same Lemma 3.3/3.5 canonical state).
+
+Transitions out of (p, j, k) — each consumes exactly one interval:
+
+    T0  terminal     0                     if cnt[p] <= k
+    TF  filler       G[q, j', k-1]         any q in (p, nxt[p]]  (zero-gain
+                                           interval [p, q), possibly short)
+    TG  gain         gain(p→x) + G[x, j', k-1]   for x in (p, nxt[p]]
+                                           (gaining interval [p, x))
+
+where gain(p→x) is Lemma 3.5's two-candidate maximum (the node containing
+x−1; the best straddling/contained node via a range-max over old interval
+sizes), with the interval starting *exactly* at p.
+
+Equivalence with the bundled DP
+-------------------------------
+Every bundled transition "fillers + interval [lb, x) gaining y" decomposes
+exactly: full greedy fillers are TF steps with q = nxt[p]; the truncated
+filler [q, lb) is a TF step with q' = lb (feasible: lb <= nxt[q]); the
+gaining interval is then a TG step *from* lb — and x <= nxt[lb] holds by
+predicate duality (lb_global[x] <= lb ⟺ x <= nxt[lb_global[x]], which is
+why the shared canonical ``feasible_tol`` predicate matters for
+correctness, not just backend consistency).  The gamma update after a
+short filler, gamma' = max(gamma, node_of(q)), preserves the exact
+candidate set: any node gaining inside [lb, x) has index >= node_of(lb)
+anyway.  Conversely, every step-DP path (including "wasteful" short
+fillers the bundled DP never takes) realizes a feasible assignment with
+the same gain, so it cannot exceed the bundled optimum: the maxima agree.
+
+Why this shape is fast on CPU
+-----------------------------
+* Every transition consumes one interval, so layer k of G depends only on
+  the finished layer k-1: no sequential loop over p — the DP is a
+  ``lax.scan`` of n' full sweeps, each a handful of fused [W, mpad] ops.
+* The window is ONE feasible jump, clamped at m (successors past m are
+  dominated by the x = m option): W = max_{p<m}(min(nxt[p], m) − p).
+* With the interval forced to start at p, every quantity in the gain
+  formulas is a function of x alone or of p alone, combined by binary
+  selects (e.g. Ss[max(lbs[y1(x)], p)] is a select between two 1-D
+  tables).  All [W, mpad] gain/mask matrices are therefore precomputed
+  ONCE per call with numpy stride tricks (zero-copy sliding windows) and
+  reused by every layer; the per-layer work is just: 3 sliding-window
+  unfolds of layer k-1 (built as a scan of ``dynamic_slice`` memcpys — no
+  scalar gathers), 2 adds, 3 selects, 3 maxes and 1 reduction.
+* The range-max over contained nodes collapses into one lookup in a tiny
+  dense (npad+2)x(npad+1) all-intervals max table, indexed by a p-side
+  row base plus an x-side column — one small-table gather, once per call.
+* No argmax is materialized: reconstruction re-derives each optimal
+  transition by exact float64 value-matching against the stored layers
+  (the DP value path contains only IEEE adds/maxes of the very arrays the
+  decoder reads, so equality is bit-exact; any matching transition is a
+  valid optimal continuation).
+
+Shape bucketing: small instances (m <= 2048) round m, W and the layer
+count to powers of two so one compilation serves many instances; large
+instances round m and W to multiples of 256 and use exactly n'+1 layers
+(every extra layer is a full sweep).  Padding tasks have zero weight and
+zero state, which provably leaves the optimum unchanged: cnt[p >= m] := 0
+so padded suffixes are free, and intervals reaching into the padding are
+clamped back to m at decode time with identical gain.
+
+The DP runs in float64 via ``jax.experimental.enable_x64`` (scoped — the
+rest of the process stays float32).
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import numpy as np
+from numpy.lib.stride_tricks import sliding_window_view
+
+from .intervals import Assignment, greedy_boundaries, max_feasible_ends
+from .ssm import Infeasible, MigrationPlan, NEG, _plan, _Pre
+
+
+def _pow2(x: int) -> int:
+    return 1 << max(0, int(x - 1).bit_length())
+
+
+def _ceil_to(x: int, step: int) -> int:
+    return ((x + step - 1) // step) * step
+
+
+def _allranges_max(fs: np.ndarray) -> np.ndarray:
+    """T[a, b1] = max(fs[a:b1]) (NEG when empty), a <= len(fs)+1."""
+    n = len(fs)
+    T = np.full((n + 2, n + 1), NEG, dtype=np.float64)
+    for a in range(n):
+        acc = NEG
+        for b1 in range(a + 1, n + 1):
+            acc = max(acc, fs[b1 - 1])
+            T[a, b1] = acc
+    return T
+
+
+@lru_cache(maxsize=64)
+def _compiled_dp(mpad: int, W: int, nk: int):
+    """Build + jit the layered one-jump DP for one (mpad, W, nk) bucket."""
+    import jax
+    import jax.numpy as jnp
+
+    LROW = mpad + W + 1
+
+    def dp(G1m, G2m, SEL, FEAS, jp1x, cntm, L0):
+        f64 = L0.dtype
+        NEGa = jnp.asarray(NEG, f64)
+        tail0 = jnp.zeros((LROW - mpad, 2), f64)
+        rows = jnp.arange(LROW, dtype=jnp.int32)
+        wis = jnp.arange(W, dtype=jnp.int32)
+
+        def layer(L1, k):
+            # three sliding-window unfolds of layer k-1: U*[wi, p] is the
+            # value at successor x = p+1+wi (plane 0, plane 1, and the
+            # cand1 jp1-premerged plane)
+            L10, L11 = L1[:, 0], L1[:, 1]
+            Lc1 = L1[rows, jp1x]
+
+            def unf(_, wi):
+                w1 = wi + 1
+                return None, (
+                    jax.lax.dynamic_slice(L10, (w1,), (mpad,)),
+                    jax.lax.dynamic_slice(L11, (w1,), (mpad,)),
+                    jax.lax.dynamic_slice(Lc1, (w1,), (mpad,)),
+                )
+
+            _, (U0, U1, Uc) = jax.lax.scan(unf, None, wis)
+
+            cols = []
+            for j in (0, 1):
+                totF = jnp.where(FEAS, jnp.where(SEL[j], U1, U0), NEGa)
+                tot1 = G1m[j] + Uc      # invalid entries hold NEG: stay
+                tot2 = G2m[j] + U0      # ~-1e30, never win, never overflow
+                M = jnp.maximum(jnp.maximum(totF, tot1), tot2)
+                red = jnp.max(M, axis=0)                       # [mpad]
+                tval = jnp.where(cntm <= k, jnp.asarray(0.0, f64), NEGa)
+                cols.append(jnp.maximum(tval, red))
+            Lk = jnp.concatenate([jnp.stack(cols, axis=1), tail0], axis=0)
+            return Lk, Lk
+
+        ks = jnp.arange(1, nk, dtype=jnp.int32)
+        _, Ls = jax.lax.scan(layer, L0, ks)
+        return Ls                                   # [nk-1, LROW, 2]
+
+    return jax.jit(dp)
+
+
+def _pad_inputs(pre: _Pre):
+    """Pad into a shape bucket and precompute the k-independent gain and
+    mask matrices (host-side numpy; zero-copy sliding windows).
+
+    Padding tasks (index >= m) have zero weight and zero state: they extend
+    the last feasible jump for free, add no gain anywhere, and cnt[p >= m]
+    is forced to 0 so reaching the padding means "done" for every k — the
+    DP optimum over the padded instance equals the real optimum.
+    """
+    m, n_real, n_new = pre.m, pre.n_real, pre.n_new
+    npad = max(n_real, 1)
+
+    # -- bucketed shapes ----------------------------------------------------
+    if m > 2048:
+        mpad = _ceil_to(m, 256)
+        nk = n_new + 1
+    else:
+        mpad = _pow2(max(m, 4))
+        nk = _pow2(n_new + 1)
+
+    Sw_pad = np.concatenate([pre.Sw, np.full(mpad - m, pre.Sw[-1])])
+    Ss_pad = np.concatenate([pre.Ss, np.full(mpad - m, pre.Ss[-1])])
+    nxt = max_feasible_ends(Sw_pad, pre.tol, np.arange(mpad + 1))
+
+    # one-jump window, clamped at m (successors past m are dominated by the
+    # x = m option; without the clamp, jumps running through the zero-weight
+    # padding would inflate W to ~mpad - m)
+    par = np.arange(m if m > 0 else 1)
+    W1 = int((np.minimum(nxt[par], m) - par).max(initial=1))
+    if m > 2048:
+        W = min(_ceil_to(max(W1, 1), 256), mpad)
+    else:
+        W = min(_pow2(max(W1, 2)), mpad)
+    LROW = mpad + W + 1
+
+    # min cover counts on the padded axis; the padded suffix is free
+    cnt = np.zeros(LROW, dtype=np.int64)
+    for a in range(min(m, mpad) - 1, -1, -1):
+        cnt[a] = 1 + cnt[nxt[a]]
+    cnt = np.minimum(cnt, nk)
+
+    # -- 1-D tables over x in [0, LROW) and p in [0, mpad) ------------------
+    NOx = np.full(LROW, n_real, dtype=np.int64)        # node containing x
+    NOx[: m + 1] = pre.node_of
+    NOx[m:] = n_real
+    lbs_e = np.full(npad, mpad, dtype=np.int64)
+    ubs_e = np.full(npad, mpad, dtype=np.int64)
+    lbs_e[:n_real] = pre.lbs
+    ubs_e[:n_real] = pre.ubs
+    fs = np.full(npad, NEG, dtype=np.float64)
+    fs[:n_real] = pre.full_size
+    PM2 = _allranges_max(fs)                           # [(npad+2), (npad+1)]
+
+    Ssx = np.empty(LROW, dtype=np.float64)             # Ss at clamped x
+    Ssx[: mpad + 1] = Ss_pad
+    Ssx[mpad:] = Ss_pad[-1]
+    Y1x = np.empty(LROW, dtype=np.int64)               # node_of[x-1]
+    Y1x[1:] = NOx[:-1]
+    Y1x[0] = 0
+    y1c = np.minimum(Y1x, npad - 1)
+    LB1x = lbs_e[y1c]                                  # lbs[node_of[x-1]]
+    SS_LB1x = Ssx[np.minimum(LB1x, mpad)]
+    jp1x = np.clip(Y1x + 1 - NOx, 0, 1)                # cand1 j' plane
+    ZH1x = np.where((NOx < n_real) & (ubs_e[np.minimum(NOx, npad - 1)]
+                                      <= np.arange(LROW)),
+                    NOx, NOx - 1) + 1                  # contained hi + 1
+
+    parange = np.arange(mpad)
+    c0 = NOx[:mpad]                                    # node containing p
+    c0c = np.minimum(c0, npad - 1)
+    # straddler at p (only candidate z == c0; needs z >= gamma, i.e. j == 0)
+    sval = Ssx[np.minimum(ubs_e[c0c], mpad)] - \
+        Ssx[np.maximum(np.minimum(lbs_e[c0c], mpad), parange)]
+    zlo0 = np.where((c0 < n_real) & (lbs_e[c0c] >= parange), c0, c0 + 1)
+    zlo_j = [np.maximum(zlo0, c0 + j) for j in (0, 1)]
+
+    # -- [W, mpad] gain/mask matrices (row wi <-> successor x = p+1+wi) -----
+    def unf(T):      # rows wi = T[1+wi : 1+wi+mpad]  (zero-copy view)
+        return sliding_window_view(T, mpad)[1 : W + 1]
+
+    wi_col = np.arange(W, dtype=np.int64)[:, None]
+    FEAS = wi_col <= (nxt[:mpad] - parange - 1)[None, :]
+    Xu = wi_col + parange[None, :] + 1
+    Y1u = unf(Y1x)
+    g1 = unf(Ssx) - np.where(unf(LB1x) >= parange[None, :],
+                             unf(SS_LB1x), Ss_pad[:mpad][None, :])
+    G1m, G2m, SEL = [], [], []
+    idx_x = unf(ZH1x)
+    for j in (0, 1):
+        gam = (c0 + j)[None, :]
+        v1 = FEAS & (Y1u >= gam) & (Y1u < n_real) & (g1 > 0)
+        G1m.append(np.where(v1, g1, NEG))
+        # contained-range max: one lookup in the tiny all-ranges table,
+        # row base from the p side, column from the x side
+        g2 = np.take(PM2.reshape(-1),
+                     zlo_j[j][None, :] * (npad + 1) + idx_x)
+        if j == 0:
+            s_ok = (c0 < n_real)[None, :] & (ubs_e[c0c][None, :] <= Xu)
+            g2 = np.maximum(g2, np.where(s_ok, sval[None, :], NEG))
+        G2m.append(np.where(FEAS & (g2 > 0), g2, NEG))
+        SEL.append(unf(NOx) < gam)                    # filler j' == 1
+
+    # layer 0: zero intervals left — done iff the suffix is already empty
+    L0 = np.where((cnt == 0)[:, None], 0.0, NEG).repeat(2, axis=1)
+
+    return dict(mpad=mpad, W=W, nk=nk, LROW=LROW, nxt=nxt, cnt=cnt,
+                NOx=NOx, jp1x=jp1x, G1m=G1m, G2m=G2m, SEL=SEL, FEAS=FEAS,
+                L0=L0, sval=sval, zlo_j=zlo_j, ZH1x=ZH1x, ubs_e=ubs_e)
+
+
+def ssm_jit(old: Assignment, w: np.ndarray, s: np.ndarray,
+            pre: _Pre) -> MigrationPlan:
+    """jit backend entry point; called by ``ssm()`` after the shared
+    (backend-independent) feasibility checks have passed."""
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    m, n_new, n_real, n_total = pre.m, pre.n_new, pre.n_real, pre.n_total
+    pad = _pad_inputs(pre)
+    mpad, W, nk = pad["mpad"], pad["W"], pad["nk"]
+    dp = _compiled_dp(mpad, W, nk)
+    i32 = np.int32
+    with enable_x64():
+        Ls = dp(jnp.asarray(np.stack(pad["G1m"])),
+                jnp.asarray(np.stack(pad["G2m"])),
+                jnp.asarray(np.stack(pad["SEL"])),
+                jnp.asarray(pad["FEAS"]),
+                jnp.asarray(pad["jp1x"].astype(i32)),
+                jnp.asarray(pad["cnt"][:mpad].astype(i32)),
+                jnp.asarray(pad["L0"]))
+        Ls = np.asarray(Ls)                     # [nk-1, LROW, 2]
+
+    L = np.concatenate([pad["L0"][None], Ls])   # L[k] = layer k values
+    total_gain = float(L[n_new, 0, 0])
+    if total_gain <= NEG / 2:
+        raise Infeasible("no feasible solution found")
+
+    # --- reconstruction: exact value-matching against stored layers --------
+    nxt, cnt, NOx, jp1x = pad["nxt"], pad["cnt"], pad["NOx"], pad["jp1x"]
+    G1m, G2m = pad["G1m"], pad["G2m"]
+    items, full_size = pre.items, pre.full_size
+    nxt_real = np.minimum(nxt[: m + 1], m)
+    new_ivs: list = [(m, m)] * n_total
+    free_ivs: list = []
+    x0, j, k = 0, 0, n_new
+    while x0 < m:
+        Gv = L[k, x0, j]
+        if cnt[x0] <= k and Gv == 0.0:
+            # zero-gain completion: greedy split of [x0, m)
+            bs = greedy_boundaries(nxt_real, x0, m)
+            free_ivs += [(bs[i], bs[i + 1]) for i in range(len(bs) - 1)]
+            break
+        assert k >= 1, "decode: positive value with no intervals left"
+        gamma = int(NOx[x0]) + j
+        prev = L[k - 1]
+        nwin = min(int(nxt[x0]) - x0, W)
+        wis = np.arange(nwin)
+        xs = x0 + 1 + wis
+        totF = prev[xs, (NOx[xs] < gamma).astype(np.int64)]
+        hitF = np.nonzero(totF == Gv)[0]
+        if hitF.size:                                  # filler [x0, q)
+            q = x0 + 1 + int(hitF[0])
+            free_ivs.append((x0, min(q, m)))
+            j = 1 if NOx[q] < gamma else 0
+            x0, k = q, k - 1
+            continue
+        tot1 = G1m[j][wis, x0] + prev[xs, jp1x[xs]]
+        hit1 = np.nonzero(tot1 == Gv)[0]
+        if hit1.size:                                  # gain via cand1
+            x = x0 + 1 + int(hit1[0])
+            y = int(NOx[x - 1])
+        else:                                          # gain via cand2
+            tot2 = G2m[j][wis, x0] + prev[xs, 0]
+            hit2 = np.nonzero(tot2 == Gv)[0]
+            assert hit2.size, "decode: no transition matches the DP value"
+            x = x0 + 1 + int(hit2[0])
+            g2v = float(G2m[j][x - x0 - 1, x0])
+            c0 = int(NOx[x0])
+            y = -1
+            if (j == 0 and c0 < n_real and int(pad["ubs_e"][c0]) <= x
+                    and float(pad["sval"][x0]) == g2v):
+                y = c0                                 # straddler at x0
+            else:
+                zlo = int(pad["zlo_j"][j][x0])
+                zhi = int(pad["ZH1x"][x]) - 1
+                assert 0 <= zlo <= zhi < n_real, "decode: empty cand2 range"
+                sub = full_size[zlo : zhi + 1]
+                y = zlo + int(np.argmax(sub))
+        node_id = items[y][0]
+        new_ivs[node_id] = (x0, min(x, m))
+        j = min(max(y + 1 - int(NOx[min(x, len(NOx) - 1)]), 0), 1)
+        x0, k = x, k - 1
+    used = {i for i, iv in enumerate(new_ivs) if iv[1] > iv[0]}
+    free_nodes = [i for i in range(n_total) if i not in used]
+    free_ivs = [(lo, hi) for lo, hi in free_ivs if hi > lo]
+    assert len(free_ivs) <= len(free_nodes), "more intervals than nodes"
+    for node_id, iv in zip(free_nodes, free_ivs):
+        new_ivs[node_id] = iv
+    new = Assignment(m, tuple(new_ivs))
+    plan = _plan(old, new, s)
+    assert abs(plan.gain - total_gain) < 1e-6 * max(1.0, abs(total_gain)), (
+        plan.gain,
+        total_gain,
+    )
+    return plan

@@ -64,7 +64,20 @@ def interval_gain_pallas(a_lo: jax.Array, a_hi: jax.Array,
     Qb, Kb = b_lo.shape
     ta = min(tile_a, Qa)
     tb = min(tile_b, Qb)
-    # pad Q dims to tile multiples
+    # Pad Q dims to tile multiples with all-zero rows (lo = hi = 0, i.e.
+    # fabricated empty intervals).  This is sound — the final slice
+    # ``out[:Qa, :Qb]`` removes every cell a padded row can influence:
+    # the DP state g[ia, jb, :] of pair (ia, jb) is updated only from
+    # g[ia, jb, :] and the boundary values of a-row ia / b-row jb (all
+    # kernel ops are elementwise over the [ta, tb] pair tile), so output
+    # cell (i, j) is a function of exactly (a_lo[i], a_hi[i], b_lo[j],
+    # b_hi[j]) — padded rows never couple into real (i < Qa, j < Qb)
+    # cells.  (They'd be harmless even if they did: an empty [0, 0]
+    # interval overlaps nothing, max(0, min(hi,0) − max(lo,0)) = 0, for
+    # the monotone prefix values lo ≥ 0 used here — the same argument
+    # that makes the callers' K-dim padding with repeated-m boundaries,
+    # lo = hi = Ss[m], contribute zero gain.)  test_kernels.py
+    # exercises non-multiple Qa/Qb against the numpy reference.
     pa = (-Qa) % ta
     pb = (-Qb) % tb
     if pa:

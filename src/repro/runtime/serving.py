@@ -65,6 +65,8 @@ class IntervalMetrics:
     forwarded: int = 0
     dropped_capacity: float = 0.0
     delivered: float = 0.0           # tuples drained this interval
+    restored_bytes: float = 0.0      # checkpoint bytes re-read after a
+    #                                  node loss (ft.recovery_plan interval)
 
 
 def plan_interval_windows(planner: ElasticPlanner, assign: Assignment,

@@ -109,7 +109,8 @@ class VectorizedServingSim:
     def __init__(self, m: int, sim: SimConfig, planner: ElasticPlanner,
                  mode: str = "live", max_inflight: int = 4,
                  tau: float = 0.4, fluid_batch: int = 1,
-                 backend: str = "numpy", record_latency: bool = False):
+                 backend: str = "numpy", record_latency: bool = False,
+                 failures: Optional[Dict[int, set]] = None):
         if mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
         if backend not in ("numpy", "jax"):
@@ -123,6 +124,12 @@ class VectorizedServingSim:
         self.fluid_batch = fluid_batch
         self.backend = backend
         self.record_latency = record_latency
+        # node-loss schedule {interval t: {failed node ids}}; at the start of
+        # interval t the failed nodes' buckets are recovered from checkpoint
+        # via ft.recovery_plan (node_trace[t] should already reflect the
+        # post-failure cluster size, so the regular planner sees no extra
+        # scale event)
+        self.failures = failures or {}
         self.latency_values: List[np.ndarray] = []
         self.latency_weights: List[np.ndarray] = []
         self.latency_intervals: List[int] = []   # met.t per recorded batch
@@ -139,6 +146,21 @@ class VectorizedServingSim:
                                      self.max_inflight, self.fluid_batch,
                                      met)
 
+    def _recover(self, assign: Assignment, failed: set, n_t: int,
+                 w_t: np.ndarray, s_t: np.ndarray,
+                 met: IntervalMetrics) -> Assignment:
+        """Node-loss recovery (ft.py): survivors' state stays put where SSM
+        can arrange it, lost buckets restore from checkpoint wherever they
+        land.  ``met.restored_bytes`` reports the strategy-independent
+        checkpoint read; ``met.migration_cost_bytes`` accumulates only the
+        survivor network moves.  Restore latency is not modeled in the
+        drain — the restored bytes are the paper-faithful cost signal."""
+        from .ft import recovery_plan, restored_bytes
+        met.restored_bytes = restored_bytes(assign, failed, s_t)
+        rec = recovery_plan(assign, failed, n_t, w_t, s_t, self.tau)
+        met.migration_cost_bytes += rec.cost
+        return rec.new
+
     def run(self, w: np.ndarray, s: np.ndarray,
             node_trace: Sequence[int]) -> List[IntervalMetrics]:
         T, m = w.shape
@@ -154,6 +176,9 @@ class VectorizedServingSim:
         for t in range(T):
             n_t = int(node_trace[t])
             met = IntervalMetrics(t=t, n_nodes=n_t)
+            if t in self.failures:
+                assign = self._recover(assign, set(self.failures[t]), n_t,
+                                       w[t], s[t], met)
             assign, un_from, un_until, freeze = self._interval_windows(
                 assign, n_t, w[t], s[t], met)
             queues = self._drain(w[t], assign, queues, un_from, un_until,

@@ -1,0 +1,59 @@
+"""Node-loss recovery (runtime/ft.py) wired through VectorizedServingSim.
+
+Scenario: 4 nodes serve m=64 buckets under a uniform workload; node 1 dies
+at interval 6 (the node trace drops 4 -> 3 at the same instant).  The sim
+routes the event through ft.recovery_plan / ft.restored_bytes:
+
+* the checkpoint read is exactly the dead node's state bytes,
+* SSM keeps every survivor's state in place (optimal network cost 0 here:
+  the lost buckets plan at s=0, so a contiguous re-cover of [16, 32) by a
+  neighbour survivor is free),
+* serving continues in every interval, with no migration thrash afterwards.
+
+Uniform w keeps the initial linspace cuts exactly balanced, so no migration
+fires before the failure and the pre-failure assignment — hence the dead
+node's bucket range [16, 32) — is known in closed form.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ElasticPlanner
+from repro.runtime.serving import SimConfig
+from repro.runtime.simulator import VectorizedServingSim
+
+M, T, T_FAIL, DEAD = 64, 12, 6, 1
+
+
+def test_vectorized_sim_node_loss_recovery():
+    rng = np.random.default_rng(0)
+    w = np.ones((T, M))
+    s = rng.uniform(0.1, 3.0, (T, M))
+    trace = [4] * T_FAIL + [3] * (T - T_FAIL)
+    sim = VectorizedServingSim(
+        M, SimConfig(interval_s=10.0, slots_per_interval=10),
+        ElasticPlanner(policy="ssm"), mode="live", tau=0.8,
+        failures={T_FAIL: {DEAD}})
+    mets = sim.run(w, s, trace)
+    assert len(mets) == T
+
+    # before the failure: steady state, nothing restored, nothing migrated
+    for met in mets[:T_FAIL]:
+        assert met.restored_bytes == 0.0
+        assert met.migration_cost_bytes == 0.0
+
+    rec = mets[T_FAIL]
+    # node 1 owned buckets [16, 32) since t=0; its state is the checkpoint
+    # read, charged in the failure interval and nowhere else
+    assert rec.restored_bytes == pytest.approx(s[T_FAIL, 16:32].sum())
+    # SSM recovery is optimal: the lost range re-covers for free (s=0), the
+    # survivors keep their state — zero network migration bytes
+    assert rec.migration_cost_bytes == pytest.approx(0.0)
+
+    # after the failure: 3 survivors are balanced, no replan thrash
+    for met in mets[T_FAIL + 1:]:
+        assert met.restored_bytes == 0.0
+        assert met.migration_cost_bytes == 0.0
+
+    # the stream kept flowing through the loss
+    for met in mets:
+        assert met.delivered > 0.0

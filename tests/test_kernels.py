@@ -171,6 +171,71 @@ def test_interval_gain_vs_numpy_reference(Qa, Qb, Ka, Kb):
                                atol=1e-5)
 
 
+@pytest.mark.parametrize("Qa,Qb,tile_a,tile_b", [
+    (5, 13, 4, 8),      # 3 padded a-rows, 3 padded b-rows
+    (9, 3, 8, 8),       # Qb < tile_b: tb clamps to 3, only a-side pads
+    (1, 129, 8, 128),   # production tile shape, 1 a-row, 127 padded b-rows
+])
+def test_interval_gain_q_padding_sliced_off(Qa, Qb, tile_a, tile_b):
+    """Zero-padded Q rows (fabricated lo=hi=0 intervals) must not leak into
+    real output cells: the kernel result on non-tile-multiple Qa/Qb equals
+    the numpy LCS reference, and is invariant to the tile choice (which is
+    the only thing that changes how much padding enters the DP).  Also pads
+    the K dim with repeated-m boundaries (PartitionTable's layout) to cover
+    the empty-tail-interval case."""
+    from repro.core import prefix_sum
+    from repro.core.mtm import pairwise_gain_matrix
+    rng = np.random.default_rng(7)
+    m = 40
+    s = rng.uniform(0.1, 3.0, m)
+    Ss = prefix_sum(s)
+    Ka, Kb = 4, 6
+
+    def rand_bounds(Q, K, pad_to):
+        out = np.full((Q, pad_to + 1), m, np.int64)
+        out[:, 0] = 0
+        for q in range(Q):
+            cuts = np.sort(rng.choice(np.arange(1, m), K - 1, replace=False))
+            out[q, 1:K] = cuts
+        return out
+
+    a = rand_bounds(Qa, Ka, Ka + 2)     # 2 empty tail intervals per row
+    b = rand_bounds(Qb, Kb, Kb + 1)
+    want = pairwise_gain_matrix(a, b, Ss)
+    a_lo, a_hi = Ss[a[:, :-1]], Ss[a[:, 1:]]
+    b_lo, b_hi = Ss[b[:, :-1]], Ss[b[:, 1:]]
+    args = [jnp.asarray(x, jnp.float32) for x in (a_lo, a_hi, b_lo, b_hi)]
+    got = interval_gain_pallas(*args, tile_a=tile_a, tile_b=tile_b,
+                               interpret=True)
+    assert got.shape == (Qa, Qb)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+    # different tiles → different padding, must be bit-identical after slice
+    got2 = interval_gain_pallas(*args, tile_a=1, tile_b=3, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(got2))
+
+
+def test_mtm_aware_plan_through_pallas_gain():
+    """mtm_aware_plan(gain_fn=ops.pairwise_gain) picks the same plan as the
+    pure-python scoring loop (f32 kernel prunes, exact f64 re-verifies)."""
+    from repro.core import (
+        Assignment, MTM, PartitionTable, mtm_aware_plan, pmc, prefix_sum,
+    )
+    rng = np.random.default_rng(3)
+    m = 16
+    w = rng.uniform(0.5, 2.0, m)
+    s = rng.uniform(0.1, 3.0, m)
+    table = PartitionTable.build(w, 2, 4, tau=0.8)
+    res = pmc(table, s, MTM.uniform(2, 4), gamma=0.7)
+    old = Assignment(m, ((0, 6), (6, 11), (11, m), (m, m)))
+    kfn = lambda a, b, Ss: ops.pairwise_gain(  # noqa: E731
+        a, b, Ss, use_pallas=True, interpret=True)
+    for n_new in (2, 3, 4):
+        base = mtm_aware_plan(old, n_new, s, res)
+        fast = mtm_aware_plan(old, n_new, s, res, gain_fn=kfn)
+        assert fast.new.intervals == base.new.intervals
+        assert fast.gain == base.gain
+
+
 def test_pairwise_gain_op_plugs_into_pmc():
     """ops.pairwise_gain is a drop-in gain_fn for core.mtm.pmc."""
     from repro.core import MTM, PartitionTable, pmc, prefix_sum
