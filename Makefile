@@ -1,5 +1,5 @@
 # Repo entrypoints.  `make test` is the ROADMAP.md tier-1 command.
-.PHONY: test test-fast bench bench-fig12 quickstart
+.PHONY: test test-fast bench bench-fig12 fig13 check-bench quickstart
 
 test:
 	scripts/ci.sh
@@ -12,6 +12,12 @@ bench:
 
 bench-fig12:
 	PYTHONPATH=src python -m benchmarks.fig12_fluid_vs_progressive
+
+fig13:
+	PYTHONPATH=src python -m benchmarks.fig13_controller
+
+check-bench:
+	python scripts/check_bench.py
 
 quickstart:
 	PYTHONPATH=src python examples/quickstart.py

@@ -1,0 +1,128 @@
+#!/usr/bin/env python
+"""Benchmark regression gate: freshly-written BENCH_*.json vs committed.
+
+``benchmarks/run.py`` asserts paper *shapes* (A beats B) but will happily
+print ALL BENCHMARKS PASSED while absolute numbers drift.  This gate
+compares every ``BENCH_*.json`` in the working tree against the version
+committed at HEAD and fails on numeric drift beyond tolerance or any
+structural change, so a benchmark regression cannot land silently.
+
+    python scripts/check_bench.py [--rtol 1e-6] [--ref HEAD] [files...]
+
+Wall-clock timing fields (elapsed/plan-time/first/steady seconds) are
+exempt — they measure the machine, not the code.  Files present only in
+the working tree are reported as new (not a failure: commit them); files
+committed but deleted from the tree fail.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# wall-clock keys: machine-dependent, never gated
+TIMING_KEY = re.compile(
+    r"(^|_)(elapsed|wall|time)(_|$)"
+    r"|(^|_)(first|steady|plan|precompute)_(s|ms)$")
+
+
+def is_timing_key(key: str) -> bool:
+    return bool(TIMING_KEY.search(key))
+
+
+def committed(name: str, ref: str) -> str | None:
+    try:
+        return subprocess.run(
+            ["git", "show", f"{ref}:{name}"], cwd=REPO, check=True,
+            capture_output=True, text=True).stdout
+    except subprocess.CalledProcessError:
+        return None
+
+
+def diff(base, fresh, rtol: float, path: str = "") -> list:
+    """Recursive compare; returns a list of human-readable mismatches."""
+    errs: list = []
+    if isinstance(base, dict) and isinstance(fresh, dict):
+        for k in sorted(set(base) | set(fresh)):
+            sub = f"{path}.{k}" if path else k
+            if k not in base:
+                errs.append(f"{sub}: new key (not in baseline)")
+            elif k not in fresh:
+                errs.append(f"{sub}: key missing from fresh output")
+            elif is_timing_key(k):
+                continue
+            else:
+                errs.extend(diff(base[k], fresh[k], rtol, sub))
+    elif isinstance(base, list) and isinstance(fresh, list):
+        if len(base) != len(fresh):
+            errs.append(f"{path}: length {len(base)} -> {len(fresh)}")
+        else:
+            for i, (b, f) in enumerate(zip(base, fresh)):
+                errs.extend(diff(b, f, rtol, f"{path}[{i}]"))
+    elif isinstance(base, (int, float)) and isinstance(fresh, (int, float)) \
+            and not isinstance(base, bool) and not isinstance(fresh, bool):
+        if not math.isclose(float(base), float(fresh), rel_tol=rtol,
+                            abs_tol=rtol):
+            errs.append(f"{path}: {base} -> {fresh} (rtol {rtol})")
+    elif base != fresh:
+        errs.append(f"{path}: {base!r} -> {fresh!r}")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*",
+                    help="BENCH_*.json files (default: all in repo root)")
+    ap.add_argument("--rtol", type=float, default=1e-6)
+    ap.add_argument("--ref", default="HEAD",
+                    help="git ref holding the baselines")
+    args = ap.parse_args(argv)
+
+    names = args.files or sorted(
+        os.path.basename(p)
+        for p in glob.glob(os.path.join(REPO, "BENCH_*.json")))
+    if not names:
+        print("check_bench: no BENCH_*.json files found")
+        return 1
+    failed = False
+    for name in names:
+        fresh_path = os.path.join(REPO, name)
+        base_text = committed(name, args.ref)
+        if not os.path.exists(fresh_path):
+            if base_text is not None:
+                print(f"FAIL {name}: committed baseline but no fresh file")
+                failed = True
+            continue
+        if base_text is None:
+            print(f"NEW  {name}: no baseline at {args.ref} "
+                  f"(commit it to start gating)")
+            continue
+        with open(fresh_path) as fh:
+            fresh = json.load(fh)
+        errs = diff(json.loads(base_text), fresh, args.rtol)
+        if errs:
+            failed = True
+            print(f"FAIL {name}: {len(errs)} mismatch(es)")
+            for e in errs[:20]:
+                print(f"  {e}")
+            if len(errs) > 20:
+                print(f"  ... and {len(errs) - 20} more")
+        else:
+            print(f"OK   {name}")
+    if failed:
+        print("check_bench: benchmark outputs drifted from committed "
+              "baselines (re-run benchmarks; if the change is intended, "
+              "commit the new JSON)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,6 +14,10 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-}" == "fast" ]]; then
     python -m pytest -x -q -m "not slow"
+    # closed-loop controller must beat always/never-migrate, and the
+    # refreshed BENCH json must match the committed baselines
+    python -m benchmarks.fig13_controller
+    python scripts/check_bench.py BENCH_controller.json
     # differential gate: every SSM solver (brute/simple/numpy/jit) must
     # agree on feasibility and optimal gain across the randomized stream
     exec python -m benchmarks.ssm_oracles

@@ -10,9 +10,16 @@ from .ft import (
     SpeedTracker, physical_migration_cost, recovery_plan, restored_bytes,
     weighted_plan,
 )
+from .control import (
+    AlwaysMigratePolicy, ControlLoop, ControlReport, Decision,
+    DecisionRecord, MigrationPolicy, Monitor, NeverMigratePolicy,
+    PolicyConfig, Signals,
+)
 from .elastic import ElasticController, ElasticEvent
+from .scenarios import SCENARIOS, Scenario
 from .serving import (
     ElasticServingSim, ElasticWordCount, IntervalMetrics, SimConfig,
+    active_nodes, imbalance_ratio,
 )
 from .simulator import (
     ChainedDataflowSim, StageSpec, VectorizedServingSim, slot_step,
@@ -29,8 +36,13 @@ __all__ = [
     "CheckpointManager", "RestoreReport",
     "SpeedTracker", "physical_migration_cost", "recovery_plan",
     "restored_bytes", "weighted_plan",
+    "AlwaysMigratePolicy", "ControlLoop", "ControlReport", "Decision",
+    "DecisionRecord", "MigrationPolicy", "Monitor", "NeverMigratePolicy",
+    "PolicyConfig", "Signals",
     "ElasticController", "ElasticEvent",
+    "SCENARIOS", "Scenario",
     "ElasticServingSim", "ElasticWordCount", "IntervalMetrics", "SimConfig",
+    "active_nodes", "imbalance_ratio",
     "ChainedDataflowSim", "StageSpec", "VectorizedServingSim", "slot_step",
     "weighted_percentile",
 ]

@@ -1,0 +1,574 @@
+"""Closed-loop elasticity control plane: monitor → decide → plan → execute.
+
+The paper solves *how* to migrate (SSM's optimal plan) and *what* the
+migration costs at serving time (§5's strategies); this module decides
+*whether* and *when* — the migrate-or-not question Volnes et al.
+(arXiv 2203.03501) frame as predicted gain vs migration cost, with the
+hysteresis/cooldown policies of Shukla & Simmhan's reliable rapid
+elasticity (arXiv 1712.00605).
+
+Pieces, each usable alone:
+
+* ``Monitor``          — folds per-interval simulator metrics (backlog,
+                         served latency, imbalance λ vs τ) into EWMA-
+                         smoothed ``Signals`` plus a violation streak.
+* ``MigrationPolicy``  — decides hold / rebalance / scale_up / scale_down
+                         from a cost model: predicted steady-state latency
+                         gain (fluid-queue drain forecast) vs migration
+                         cost (planned pause windows priced in delayed
+                         tuple-seconds), with hysteresis (trigger τ above
+                         the plan τ), patience, and cooldown.  Also picks
+                         the strategy + ``fluid_batch`` per decision so a
+                         bucket's pause stays under a budget.
+* ``ControlLoop``      — drives any simulator exposing the stepped
+                         ``reset()`` / ``step_interval()`` API
+                         (ElasticServingSim, VectorizedServingSim) over a
+                         ``scenarios.Scenario``; node losses and capacity
+                         changes enter as monitor inputs, not out-of-band
+                         calls.  Every interval produces a
+                         ``DecisionRecord`` — the audit log shared with
+                         ``ElasticController``.
+* ``AlwaysMigratePolicy`` / ``NeverMigratePolicy`` — the two baselines the
+  closed loop must beat (benchmarks/fig13_controller.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core import Assignment, ElasticPlanner, MigrationPlan
+from repro.core.ssm import Infeasible
+from .migration import move_list
+from .serving import (
+    SimConfig, active_nodes, imbalance_ratio, node_capacity,
+    strategy_windows,
+)
+
+
+# ---------------------------------------------------------------------------
+# Signals / monitor
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Signals:
+    """One interval's smoothed view of the system (Monitor output)."""
+
+    t: int
+    rate: float                  # tuples/s observed this interval
+    backlog: float               # queued tuples at interval end
+    backlog_ewma: float
+    imbalance: float             # post-plan λ this interval (Def. 2.1)
+    imbalance_ewma: float
+    latency_ewma: float          # served-weighted mean response, smoothed
+    max_latency: float
+    violation_streak: int        # consecutive intervals with λ_ewma > trigger
+    lost_nodes: int              # nodes that died this interval (ft input)
+    capacity: int                # node budget offered this interval
+
+    def as_dict(self) -> dict:
+        return {
+            "rate": self.rate, "backlog": self.backlog,
+            "backlog_ewma": self.backlog_ewma,
+            "imbalance": self.imbalance,
+            "imbalance_ewma": self.imbalance_ewma,
+            "latency_ewma": self.latency_ewma,
+            "max_latency": self.max_latency,
+            "violation_streak": self.violation_streak,
+            "lost_nodes": self.lost_nodes, "capacity": self.capacity,
+        }
+
+
+class Monitor:
+    """EWMA smoothing over raw per-interval observations.
+
+    ``trigger`` is the imbalance level that counts as a violation; the
+    violation *streak* (consecutive intervals above trigger) is what the
+    policy's patience gate reads, so one noisy interval never migrates."""
+
+    def __init__(self, alpha: float = 0.5, trigger: float = 0.4):
+        self.alpha = alpha
+        self.trigger = trigger
+        self.reset()
+
+    def reset(self) -> "Monitor":
+        self._imb = None
+        self._lat = None
+        self._back = None
+        self._streak = 0
+        return self
+
+    def _ewma(self, prev: Optional[float], x: float) -> float:
+        return x if prev is None else self.alpha * x + \
+            (1 - self.alpha) * prev
+
+    def observe(self, t: int, rate: float, backlog: float, imbalance: float,
+                mean_latency: float = 0.0, max_latency: float = 0.0,
+                lost_nodes: int = 0, capacity: int = 0) -> Signals:
+        self._imb = self._ewma(self._imb, imbalance)
+        self._lat = self._ewma(self._lat, mean_latency)
+        self._back = self._ewma(self._back, backlog)
+        if self._imb > self.trigger:
+            self._streak += 1
+        else:
+            self._streak = 0
+        return Signals(
+            t=t, rate=rate, backlog=backlog, backlog_ewma=self._back,
+            imbalance=imbalance, imbalance_ewma=self._imb,
+            latency_ewma=self._lat, max_latency=max_latency,
+            violation_streak=self._streak, lost_nodes=lost_nodes,
+            capacity=capacity)
+
+    def observe_metrics(self, met, interval_s: float, lost_nodes: int = 0,
+                        capacity: int = 0) -> Signals:
+        """Fold an ``IntervalMetrics`` (any of the simulators) directly."""
+        return self.observe(
+            t=met.t, rate=met.delivered / max(interval_s, 1e-12),
+            backlog=met.dropped_capacity, imbalance=met.imbalance,
+            mean_latency=met.mean_response_s, max_latency=met.max_response_s,
+            lost_nodes=lost_nodes, capacity=capacity)
+
+
+# ---------------------------------------------------------------------------
+# Decisions
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Decision:
+    """What the policy wants the executor/simulator to do this interval."""
+
+    action: str                      # hold|rebalance|scale_up|scale_down|
+    #                                  recover|auto
+    n_target: int
+    replan: Optional[bool]           # None = legacy autonomous trigger
+    mode: Optional[str] = None       # strategy override for this decision
+    fluid_batch: Optional[int] = None
+    tau_plan: Optional[float] = None
+    predicted_gain_s: float = 0.0    # forecast mean-latency saving (s/tuple)
+    predicted_cost_s: float = 0.0    # forecast pause cost, same units
+    reason: str = ""
+
+
+@dataclass
+class DecisionRecord:
+    """Decision + realized outcome: the audit log row every control path
+    (ControlLoop, ElasticController) emits."""
+
+    t: int
+    action: str
+    n_before: int
+    n_after: int
+    reason: str = ""
+    strategy: Optional[str] = None
+    fluid_batch: Optional[int] = None
+    predicted_gain_s: float = 0.0
+    predicted_cost_s: float = 0.0
+    cost_bytes: float = 0.0          # realized network bytes
+    restored_bytes: float = 0.0      # realized checkpoint read (node loss)
+    duration_s: float = 0.0          # realized migration duration
+    signals: dict = field(default_factory=dict)
+
+    @property
+    def migrated(self) -> bool:
+        return self.cost_bytes > 0 or self.restored_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# Cost model helpers (pure functions; both sims' semantics)
+# ---------------------------------------------------------------------------
+
+def forecast_mean_wait(node_rate: np.ndarray, node_backlog: np.ndarray,
+                       cap_node: float, horizon_s: float,
+                       service_s: float) -> float:
+    """Fluid-queue drain forecast: served-weighted mean waiting time over
+    the horizon if nothing changes.
+
+    Per node, queue(t) = max(0, b0 + (rate − cap)·t): overloaded nodes grow
+    linearly, underloaded nodes drain to ~0 and stay there.  The
+    simulators' wait is queue/cap at serve time, so the mean wait is the
+    time-averaged queue over the horizon divided by cap, weighted by each
+    node's arrival rate (≈ its served share)."""
+    r = np.asarray(node_rate, dtype=np.float64)
+    b0 = np.asarray(node_backlog, dtype=np.float64)
+    c = max(cap_node, 1e-12)
+    H = max(horizon_s, 1e-12)
+    drain = c - r
+    # time to empty; inf when the node can't keep up
+    with np.errstate(divide="ignore"):
+        t_empty = np.where(drain > 0, b0 / np.maximum(drain, 1e-12), np.inf)
+    t_e = np.minimum(t_empty, H)
+    # integral of queue over [0, H]: triangle down to empty + growth part
+    integral = np.where(
+        t_empty >= H,
+        b0 * H + 0.5 * (r - c) * H * H,          # never empties in horizon
+        0.5 * b0 * t_e)                           # drains, then ~0
+    integral = np.maximum(integral, 0.0)
+    avg_q = integral / H
+    wait = avg_q / c
+    w_tot = r.sum()
+    if w_tot <= 0:
+        return service_s
+    return float((r * wait).sum() / w_tot) + service_s
+
+
+def node_loads(assign: Assignment, per_bucket: np.ndarray
+               ) -> np.ndarray:
+    """Sum ``per_bucket`` over each *active* node's interval."""
+    return np.array([per_bucket[lo:hi].sum()
+                     for lo, hi in assign.intervals if hi > lo])
+
+
+def pause_cost_tuple_s(w_rate: np.ndarray, un_from: np.ndarray,
+                       un_until: np.ndarray, freeze: float,
+                       interval_s: float) -> float:
+    """Tuple·seconds of waiting a migration schedule adds: arrivals during
+    a bucket's pause window (or the app freeze) wait on average half the
+    window.  This is exactly what the simulators charge, so the policy and
+    the execution agree on the price."""
+    f = min(freeze, interval_s)
+    cost = float(w_rate.sum()) * f * f / 2.0
+    a = np.minimum(un_from, interval_s)
+    b = np.minimum(un_until, interval_s)
+    win = np.maximum(b - a, 0.0)
+    cost += float((w_rate * win * win).sum()) / 2.0
+    return cost
+
+
+def select_strategy(moves, bw_bytes_per_s: float, pause_budget_s: float
+                    ) -> Tuple[str, int]:
+    """Pick strategy + fluid_batch so no bucket pauses longer than the
+    budget: if the whole transfer fits, one live bulk phase is fine;
+    otherwise fluid with the largest batch whose per-phase per-node bytes
+    (batch · max bucket) still land within the budget."""
+    if not moves:
+        return "live", 1
+    total = sum(mv.nbytes for mv in moves)
+    mx = max(mv.nbytes for mv in moves)
+    if total / bw_bytes_per_s <= pause_budget_s:
+        return "live", 1
+    batch = int(pause_budget_s * bw_bytes_per_s // max(mx, 1.0))
+    return "fluid", max(batch, 1)
+
+
+# ---------------------------------------------------------------------------
+# The policy
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PolicyConfig:
+    """Knobs of the migrate-or-not decision (runtime/README.md)."""
+
+    tau_trigger: float = 0.4      # act when smoothed λ exceeds this
+    tau_plan: float = 0.2         # plan to this tighter τ (hysteresis gap)
+    patience: int = 1             # sustained violation intervals before act
+    cooldown: int = 1             # min intervals between voluntary acts
+    urgent_factor: float = 2.0    # λ_ewma ≥ factor·trigger skips both gates
+    max_cost_s: float = 0.05      # insurance replans still skipped above this
+    horizon_s: float = 600.0      # expected-benefit amortization horizon
+    safety: float = 1.25          # required gain/cost ratio
+    min_gain_s: float = 1e-4      # ignore sub-0.1 ms mean-latency gains
+    pause_budget_s: float = 2.0   # per-bucket pause target (strategy pick)
+    consider_scale: bool = True   # also evaluate n±1 candidates
+
+
+class MigrationPolicy:
+    """Gain-vs-cost migrate-or-not decisions with hysteresis + cooldown.
+
+    ``tau_serve`` is the simulator's serving τ (capacity provisioning);
+    ``cfg.tau_trigger``/``cfg.tau_plan`` bound the hysteresis band: act
+    only when the smoothed imbalance has exceeded ``tau_trigger`` for
+    ``patience`` intervals, then re-balance down to ``tau_plan`` so the
+    system re-enters the band with slack."""
+
+    def __init__(self, planner: ElasticPlanner, sim: SimConfig,
+                 tau_serve: float = 0.4,
+                 cfg: Optional[PolicyConfig] = None):
+        self.planner = planner
+        self.sim = sim
+        self.tau_serve = tau_serve
+        self.cfg = cfg or PolicyConfig(tau_trigger=tau_serve,
+                                       tau_plan=tau_serve / 2.0)
+        self.reset()
+
+    @classmethod
+    def for_sim(cls, sv, cfg: Optional[PolicyConfig] = None
+                ) -> "MigrationPolicy":
+        """Build from a serving simulator's planner/SimConfig/τ."""
+        return cls(sv.planner, sv.sim, tau_serve=sv.tau, cfg=cfg)
+
+    def reset(self) -> "MigrationPolicy":
+        self.last_migration_t = -10**9
+        return self
+
+    def note_migration(self, t: int) -> None:
+        """An out-of-policy migration happened (e.g. failure recovery) —
+        restart the cooldown clock."""
+        self.last_migration_t = t
+
+    # -- scoring ------------------------------------------------------------
+    def _score_plan(self, plan: MigrationPlan, w_rate: np.ndarray,
+                    queues: np.ndarray, s_est: np.ndarray
+                    ) -> Tuple[float, float, str, int]:
+        """(gain_s, cost_s, mode, fluid_batch) for executing ``plan`` now.
+
+        gain_s: forecast mean-wait drop over the horizon (s/tuple).
+        cost_s: planned pause windows priced in delayed tuple·seconds,
+        spread over every tuple served in the horizon — same units."""
+        cfg, sim = self.cfg, self.sim
+        rate = float(w_rate.sum())
+        n_new = active_nodes(plan.new)
+        cap_new = node_capacity(sim, self.tau_serve, rate, n_new)
+        # backlog travels with its bucket: redistribute by the new owner
+        after = forecast_mean_wait(
+            node_loads(plan.new, w_rate), node_loads(plan.new, queues),
+            cap_new, cfg.horizon_s, sim.service_s)
+        n_old = active_nodes(plan.old)
+        cap_old = node_capacity(sim, self.tau_serve, rate, n_old)
+        hold = forecast_mean_wait(
+            node_loads(plan.old, w_rate), node_loads(plan.old, queues),
+            cap_old, cfg.horizon_s, sim.service_s)
+        gain_s = hold - after
+        moves = move_list(plan, s_est)
+        mode, batch = select_strategy(moves, sim.bw_bytes_per_s,
+                                      cfg.pause_budget_s)
+        un_from, un_until, _dur, freeze = strategy_windows(
+            moves, s_est, sim, mode, max_inflight=4, fluid_batch=batch,
+            m=plan.old.m)
+        tuple_s = pause_cost_tuple_s(w_rate, un_from, un_until, freeze,
+                                     sim.interval_s)
+        cost_s = tuple_s / max(rate * cfg.horizon_s, 1e-12)
+        return gain_s, cost_s, mode, batch
+
+    # -- the decision --------------------------------------------------------
+    def decide(self, sig: Optional[Signals], assign: Assignment,
+               w_est: Optional[np.ndarray], s_est: Optional[np.ndarray],
+               queues: np.ndarray, n_cap: int, t: int) -> Decision:
+        """One control period's decision.
+
+        ``w_est``/``s_est`` are the *observed* per-bucket workload/state
+        (typically the previous interval — the policy never peeks at the
+        future); ``queues`` is the current per-bucket backlog; ``n_cap``
+        the node budget offered by the cluster this interval."""
+        cfg = self.cfg
+        n_cur = active_nodes(assign)
+        # forced scale-down: the cluster retracted nodes we are using
+        if n_cap < n_cur:
+            dec = self._planned_decision(
+                assign, n_cap, w_est, s_est, queues,
+                action="scale_down", reason=f"capacity retracted to {n_cap}")
+            self.last_migration_t = t
+            return dec
+        if sig is None or w_est is None:
+            # bootstrap: the initial uniform placement has never seen the
+            # load; one replan against the first observed interval is the
+            # same free fix every legacy run() caller got at t=0
+            self.last_migration_t = t
+            return Decision("rebalance", n_cur, True, tau_plan=cfg.tau_plan,
+                            reason="bootstrap placement")
+        urgent = sig.imbalance_ewma >= cfg.urgent_factor * cfg.tau_trigger
+        if not urgent:
+            if t - self.last_migration_t <= cfg.cooldown:
+                return Decision(
+                    "hold", n_cur, False,
+                    reason=f"cooldown ({t - self.last_migration_t}"
+                           f"/{cfg.cooldown})")
+            if sig.violation_streak < cfg.patience:
+                why = "balanced" if sig.imbalance_ewma <= cfg.tau_trigger \
+                    else f"patience ({sig.violation_streak}/{cfg.patience})"
+                return Decision("hold", n_cur, False, reason=why)
+        # sustained violation: price the candidates
+        w_rate = np.asarray(w_est, dtype=np.float64) / self.sim.interval_s
+        # candidates: rebalance in place, or grow toward the offered budget.
+        # Voluntary shrink is never a latency play here — aggregate capacity
+        # is rate-proportional (independent of n), and fewer nodes always
+        # *look* easier to balance, so a shrink candidate degenerates the
+        # policy into draining the cluster.  Shrink only when forced above.
+        cands = [n_cur]
+        if cfg.consider_scale and n_cur + 1 <= n_cap:
+            cands.append(n_cur + 1)
+        best = None
+        for n in cands:
+            try:
+                plan = self.planner.plan(assign, n, w_est, s_est,
+                                         tau=cfg.tau_plan)
+            except Infeasible:
+                continue
+            gain_s, cost_s, mode, batch = self._score_plan(
+                plan, w_rate, queues, s_est)
+            net = gain_s - cfg.safety * cost_s
+            if best is None or net > best[0]:
+                best = (net, n, gain_s, cost_s, mode, batch)
+        if best is None:
+            return Decision("hold", n_cur, False,
+                            reason="no feasible candidate plan")
+        _net, n, gain_s, cost_s, mode, batch = best
+        if best[0] > cfg.min_gain_s:
+            why = (f"gain {gain_s:.4g}s beats cost {cost_s:.4g}s over "
+                   f"{cfg.horizon_s:.0f}s horizon")
+        elif cost_s <= cfg.max_cost_s:
+            # the queue forecast is myopic: below the overload margin it
+            # sees no gain, but a *sustained* τ violation means drift will
+            # push us over it — rebalance now as insurance while the move
+            # is still cheap (hysteresis: trigger high, re-plan τ low)
+            why = (f"sustained τ violation (λ̄={sig.imbalance_ewma:.2f}), "
+                   f"cost {cost_s:.4g}s within budget")
+        else:
+            return Decision("hold", n_cur, False, predicted_gain_s=gain_s,
+                            predicted_cost_s=cost_s,
+                            reason="gain does not beat cost")
+        action = "rebalance" if n == n_cur else (
+            "scale_up" if n > n_cur else "scale_down")
+        self.last_migration_t = t
+        return Decision(action, n, True, mode=mode, fluid_batch=batch,
+                        tau_plan=cfg.tau_plan, predicted_gain_s=gain_s,
+                        predicted_cost_s=cost_s, reason=why)
+
+    def _planned_decision(self, assign, n_target, w_est, s_est, queues,
+                          action: str, reason: str) -> Decision:
+        """Forced migration (capacity retraction): still pick the cheapest
+        strategy and report the forecast, but never hold."""
+        cfg = self.cfg
+        mode: Optional[str] = None
+        batch: Optional[int] = None
+        gain_s = cost_s = 0.0
+        if w_est is not None and s_est is not None:
+            w_rate = np.asarray(w_est, dtype=np.float64) / self.sim.interval_s
+            try:
+                plan = self.planner.plan(assign, n_target, w_est, s_est,
+                                         tau=cfg.tau_plan)
+                gain_s, cost_s, mode, batch = self._score_plan(
+                    plan, w_rate, queues, s_est)
+            except Infeasible:
+                pass
+        return Decision(action, n_target, True, mode=mode,
+                        fluid_batch=batch, tau_plan=cfg.tau_plan,
+                        predicted_gain_s=gain_s, predicted_cost_s=cost_s,
+                        reason=reason)
+
+
+class AlwaysMigratePolicy:
+    """Baseline: follow the offered capacity and let the legacy autonomous
+    trigger replan on every scale event or τ violation (what the sims did
+    before the control plane existed)."""
+
+    def reset(self) -> "AlwaysMigratePolicy":
+        return self
+
+    def note_migration(self, t: int) -> None:
+        pass
+
+    def decide(self, sig, assign, w_est, s_est, queues, n_cap: int,
+               t: int) -> Decision:
+        return Decision("auto", int(n_cap), None, reason="follow capacity")
+
+
+class NeverMigratePolicy:
+    """Baseline: never migrate voluntarily (failure recovery still happens —
+    dead nodes cannot serve)."""
+
+    def reset(self) -> "NeverMigratePolicy":
+        return self
+
+    def note_migration(self, t: int) -> None:
+        pass
+
+    def decide(self, sig, assign, w_est, s_est, queues, n_cap: int,
+               t: int) -> Decision:
+        return Decision("hold", active_nodes(assign), False, reason="never")
+
+
+# ---------------------------------------------------------------------------
+# The loop
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ControlReport:
+    """One closed-loop run: per-interval metrics + the decision log."""
+
+    metrics: list
+    decisions: List[DecisionRecord]
+
+    @property
+    def migrations(self) -> int:
+        return sum(1 for d in self.decisions if d.migrated)
+
+    @property
+    def bytes_moved(self) -> float:
+        return float(sum(d.cost_bytes for d in self.decisions))
+
+    @property
+    def restored_bytes(self) -> float:
+        return float(sum(d.restored_bytes for d in self.decisions))
+
+    @property
+    def migration_intervals(self) -> Set[int]:
+        return {d.t for d in self.decisions if d.migrated}
+
+
+class ControlLoop:
+    """monitor → decide → plan → execute over a stepped simulator.
+
+    ``sim`` is any single-operator simulator exposing ``reset(n0)`` /
+    ``step_interval(w_t, s_t, n_t, failed=..., replan=..., mode=...,
+    fluid_batch=..., tau=...)`` / ``bucket_backlog`` — both
+    ElasticServingSim and VectorizedServingSim qualify, which is what the
+    scalar-vs-vector differential test drives.  Node losses and capacity
+    changes arrive from the scenario and are folded into the monitor's
+    signals rather than invoked out-of-band."""
+
+    def __init__(self, sim, policy=None, monitor: Optional[Monitor] = None):
+        self.sim = sim
+        self.policy = policy if policy is not None else \
+            MigrationPolicy.for_sim(sim)
+        trig = getattr(getattr(self.policy, "cfg", None), "tau_trigger",
+                       getattr(sim, "tau", 0.4))
+        self.monitor = monitor or Monitor(trigger=trig)
+
+    def run(self, scenario) -> ControlReport:
+        sim = self.sim
+        sim.reset(scenario.n0)
+        self.policy.reset()
+        self.monitor.reset()
+        sig: Optional[Signals] = None
+        w_prev: Optional[np.ndarray] = None
+        s_prev: Optional[np.ndarray] = None
+        decisions: List[DecisionRecord] = []
+        mets = []
+        T = len(scenario.w)
+        for t in range(T):
+            failed = scenario.failures.get(t)
+            cap = int(scenario.capacity[t])
+            n_before = active_nodes(sim.assign)
+            if failed:
+                # node loss: recovery is not optional; the decision records
+                # it and the monitor sees it as a lost-node signal
+                n_target = max(min(n_before - len(failed), cap), 1)
+                decision = Decision(
+                    "recover", n_target, False,
+                    reason=f"lost nodes {sorted(failed)}")
+                self.policy.note_migration(t)
+            else:
+                decision = self.policy.decide(
+                    sig, sim.assign, w_prev, s_prev, sim.bucket_backlog,
+                    cap, t)
+            met = sim.step_interval(
+                scenario.w[t], scenario.s[t], n_t=decision.n_target,
+                failed=failed, replan=decision.replan, mode=decision.mode,
+                fluid_batch=decision.fluid_batch, tau=decision.tau_plan)
+            sig = self.monitor.observe_metrics(
+                met, self.sim.sim.interval_s,
+                lost_nodes=len(failed) if failed else 0, capacity=cap)
+            decisions.append(DecisionRecord(
+                t=t, action=decision.action, n_before=n_before,
+                n_after=active_nodes(sim.assign), reason=decision.reason,
+                strategy=decision.mode, fluid_batch=decision.fluid_batch,
+                predicted_gain_s=decision.predicted_gain_s,
+                predicted_cost_s=decision.predicted_cost_s,
+                cost_bytes=met.migration_cost_bytes,
+                restored_bytes=met.restored_bytes,
+                duration_s=met.migration_duration_s,
+                signals=sig.as_dict()))
+            mets.append(met)
+            w_prev, s_prev = scenario.w[t], scenario.s[t]
+        return ControlReport(metrics=mets, decisions=decisions)

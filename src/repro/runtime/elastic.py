@@ -21,6 +21,7 @@ from repro.core import (
     Assignment, ElasticPlanner, MigrationPlan, MTM, satisfies_balance,
 )
 from .checkpoint import CheckpointManager
+from .control import DecisionRecord
 from .ft import SpeedTracker, recovery_plan, restored_bytes
 from .migration import MigrationExecutor, MigrationReport
 from .state import BucketedState
@@ -28,6 +29,11 @@ from .state import BucketedState
 
 @dataclass
 class ElasticEvent:
+    """Legacy view of one topology change.  The controller's source of
+    truth is now the ``DecisionRecord`` log shared with the closed-loop
+    control plane (``runtime.control``); ``ElasticController.events``
+    derives these from it."""
+
     kind: str                      # scale | rebalance | recover | straggler
     n_before: int
     n_after: int
@@ -57,7 +63,15 @@ class ElasticController:
         self.ckpt = ckpt
         self.history: List[int] = [n_nodes]
         self.speeds = SpeedTracker(n_nodes)
-        self.events: List[ElasticEvent] = []
+        self.decisions: List[DecisionRecord] = []
+
+    @property
+    def events(self) -> List[ElasticEvent]:
+        """Legacy event log, derived from the shared decision records."""
+        return [ElasticEvent(
+            kind=d.action, n_before=d.n_before, n_after=d.n_after,
+            cost_bytes=d.cost_bytes, duration_s=d.duration_s,
+            details=dict(d.signals)) for d in self.decisions]
 
     # -- observations --------------------------------------------------------
     @property
@@ -72,16 +86,20 @@ class ElasticController:
 
     # -- actions --------------------------------------------------------------
     def _apply(self, plan: MigrationPlan, state: BucketedState,
-               kind: str, **details) -> Tuple[MigrationPlan, MigrationReport]:
+               kind: str, reason: str = "", **details
+               ) -> Tuple[MigrationPlan, MigrationReport]:
         placement = self.assign.owner_of()
         report = self.executor.execute(plan, state, placement)
         n_before = self.n_nodes
         self.assign = plan.new
         self.history.append(self.n_nodes)
-        self.events.append(ElasticEvent(
-            kind=kind, n_before=n_before, n_after=self.n_nodes,
-            cost_bytes=plan.cost, duration_s=report.duration_s,
-            details=details))
+        self.decisions.append(DecisionRecord(
+            t=len(self.history) - 2, action=kind, n_before=n_before,
+            n_after=self.n_nodes, reason=reason,
+            strategy=self.executor.mode,
+            cost_bytes=plan.cost,
+            restored_bytes=float(details.get("checkpoint_bytes", 0.0)),
+            duration_s=report.duration_s, signals=details))
         return plan, report
 
     def scale(self, n_new: int, w: np.ndarray, state: BucketedState,
@@ -89,16 +107,19 @@ class ElasticController:
         plan = self.planner.plan(self.assign, n_new, w,
                                  state.bucket_bytes(),
                                  tau=tau if tau is not None else self.tau)
-        return self._apply(plan, state, "scale")
+        return self._apply(plan, state, "scale",
+                           reason=f"requested n={n_new}")
 
-    def rebalance(self, w: np.ndarray, state: BucketedState):
+    def rebalance(self, w: np.ndarray, state: BucketedState,
+                  reason: str = "requested"):
         plan = self.planner.plan(self.assign, self.n_nodes, w,
                                  state.bucket_bytes(), tau=self.tau)
-        return self._apply(plan, state, "rebalance")
+        return self._apply(plan, state, "rebalance", reason=reason)
 
     def maybe_rebalance(self, w: np.ndarray, state: BucketedState):
         if self.balance_violated(w):
-            return self.rebalance(w, state)
+            return self.rebalance(w, state,
+                                  reason=f"τ={self.tau} balance violated")
         return None
 
     def recover(self, failed: Set[int], w: np.ndarray, state: BucketedState,
@@ -109,8 +130,9 @@ class ElasticController:
         n_target = n_new if n_new is not None else self.n_nodes - len(failed)
         plan = recovery_plan(self.assign, failed, n_target, w, s, self.tau)
         ck_bytes = restored_bytes(self.assign, failed, s)
-        return self._apply(plan, state, "recover", failed=sorted(failed),
-                           checkpoint_bytes=ck_bytes)
+        return self._apply(plan, state, "recover",
+                           reason=f"lost nodes {sorted(failed)}",
+                           failed=sorted(failed), checkpoint_bytes=ck_bytes)
 
     def checkpoint(self, step: int, state: BucketedState, extra=None,
                    async_: bool = True):

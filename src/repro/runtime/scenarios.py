@@ -1,0 +1,159 @@
+"""Scenario library for closed-loop controller evaluation.
+
+Each scenario packages everything a ``control.ControlLoop`` run needs:
+per-interval per-bucket workloads ``w`` and state sizes ``s``, the initial
+node count, the per-interval node *budget* (``capacity`` — what the
+cluster offers, which the policy may decline to use), and scheduled node
+failures.  The catalog covers the situations a production elasticity
+controller must not mishandle:
+
+* ``diurnal``        — slow sinusoidal load; a good policy mostly holds.
+* ``flash_crowd``    — sudden rate x spike concentrated on a few hot
+                       buckets; capacity arrives late, imbalance first.
+* ``skew_drift``     — constant total rate, hotspot center drifts across
+                       the key space; pure-rebalance territory.
+* ``node_loss``      — a node dies right after a scale-up (i.e. while the
+                       migration's effects are still settling).
+* ``capacity_flap``  — the offered node budget oscillates n <-> n+2 every
+                       few intervals; chasing it migrates constantly for
+                       nothing.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Set
+
+import numpy as np
+
+from repro.data.streaming import BurstyZipfStream, task_state_sizes
+
+
+@dataclass
+class Scenario:
+    name: str
+    w: np.ndarray                       # [T, m] per-interval bucket loads
+    s: np.ndarray                       # [T, m] per-interval state bytes
+    n0: int                             # initial node count
+    capacity: np.ndarray                # [T] offered node budget
+    failures: Dict[int, Set[int]] = field(default_factory=dict)
+    description: str = ""
+
+    @property
+    def T(self) -> int:
+        return int(self.w.shape[0])
+
+    @property
+    def m(self) -> int:
+        return int(self.w.shape[1])
+
+    @property
+    def total_state_bytes(self) -> float:
+        """Mean per-interval total state — the normalizer for bytes-moved."""
+        return float(self.s.sum(axis=1).mean())
+
+
+def _zipf_shares(m: int, a: float, rng: np.random.Generator) -> np.ndarray:
+    shares = 1.0 / np.arange(1, m + 1) ** a
+    rng.shuffle(shares)
+    return shares / shares.sum()
+
+
+def _finish(name: str, w: np.ndarray, s_scale: float, n0: int,
+            capacity: np.ndarray, failures=None, description: str = ""
+            ) -> Scenario:
+    s = task_state_sizes(w) * s_scale
+    return Scenario(name=name, w=w, s=s, n0=n0,
+                    capacity=capacity.astype(np.int64),
+                    failures=failures or {}, description=description)
+
+
+def diurnal(T: int = 48, m: int = 96, seed: int = 0) -> Scenario:
+    """Slow sinusoidal total rate, mild skew, capacity tracks the wave."""
+    w = BurstyZipfStream(m_tasks=m, zipf_a=0.9, diurnal_amp=0.5,
+                         burst_prob=0.0, seed=seed).intervals(T)
+    frac = (w.sum(axis=1) - w.sum(axis=1).min()) / max(
+        np.ptp(w.sum(axis=1)), 1e-9)
+    cap = np.round(6 + 4 * frac)
+    return _finish("diurnal", w, 1.0, int(cap[0]), cap,
+                   description="slow daily wave; mostly hold")
+
+
+def flash_crowd(T: int = 48, m: int = 96, seed: int = 1) -> Scenario:
+    """Rate jumps ~5x mid-run and the surge is concentrated on a handful
+    of hot buckets, so imbalance spikes before capacity catches up."""
+    rng = np.random.default_rng(seed)
+    shares = _zipf_shares(m, 1.0, rng)
+    hot = np.argsort(shares)[-4:]
+    rate = np.full(T, 9_000.0)
+    t0, t1 = T // 3, T // 3 + 10
+    rate[t0:t1] = 45_000.0
+    w = np.zeros((T, m))
+    for t in range(T):
+        cur = shares.copy()
+        if t0 <= t < t1:
+            cur[hot] *= 8.0
+            cur /= cur.sum()
+        w[t] = rng.poisson(rate[t] * cur)
+    cap = np.full(T, 6.0)
+    cap[t0 + 2:t1 + 4] = 10.0          # ops add nodes two intervals late
+    return _finish("flash_crowd", w, 1.0, 6, cap,
+                   description="5x surge on 4 hot buckets, capacity late")
+
+
+def skew_drift(T: int = 48, m: int = 96, seed: int = 2) -> Scenario:
+    """Constant total rate; a gaussian hotspot drifts across the key
+    space, slowly invalidating any fixed assignment."""
+    rng = np.random.default_rng(seed)
+    base = _zipf_shares(m, 0.6, rng)
+    idx = np.arange(m)
+    w = np.zeros((T, m))
+    # drift slow enough that a fresh plan stays valid a few intervals
+    # (hot topics shift over hours, not minutes) — fast drift degenerates
+    # every policy to per-interval replanning
+    for t in range(T):
+        center = m * (0.3 + 0.4 * t / max(T - 1, 1))
+        hot = np.exp(-0.5 * ((idx - center) / (m * 0.10)) ** 2)
+        cur = base * (1.0 + 4.0 * hot)
+        cur /= cur.sum()
+        w[t] = rng.poisson(12_000.0 * cur)
+    # a noisy autoscaler offers extra nodes every few intervals; aggregate
+    # capacity is rate-proportional, so taking them buys nothing
+    cap = np.where((np.arange(T) // 4) % 2 == 0, 8.0, 10.0)
+    return _finish("skew_drift", w, 1.0, 8, cap,
+                   description="drifting gaussian hotspot, noisy budget")
+
+
+def node_loss(T: int = 48, m: int = 96, seed: int = 3) -> Scenario:
+    """Diurnal load with a scale-up at t0 (capacity step) and a node death
+    two intervals later — recovery lands mid-settling."""
+    w = BurstyZipfStream(m_tasks=m, zipf_a=1.0, diurnal_amp=0.3,
+                         burst_prob=0.1, seed=seed).intervals(T)
+    cap = np.full(T, 6.0)
+    t0 = T // 2
+    cap[t0:] = 9.0
+    failures = {t0 + 2: {1}}
+    return _finish("node_loss", w, 1.0, 6, cap, failures,
+                   description="scale-up then node 1 dies 2 intervals in")
+
+
+def capacity_flap(T: int = 48, m: int = 96, seed: int = 4) -> Scenario:
+    """Steady load but the offered budget oscillates 6 <-> 8 every three
+    intervals; following it migrates state back and forth for no gain."""
+    w = BurstyZipfStream(m_tasks=m, zipf_a=0.8, diurnal_amp=0.05,
+                         burst_prob=0.0, seed=seed).intervals(T)
+    cap = np.where((np.arange(T) // 3) % 2 == 0, 6.0, 8.0)
+    return _finish("capacity_flap", w, 1.0, 6, cap,
+                   description="budget flaps 6<->8; the right move is hold")
+
+
+SCENARIOS: Dict[str, Callable[..., Scenario]] = {
+    "diurnal": diurnal,
+    "flash_crowd": flash_crowd,
+    "skew_drift": skew_drift,
+    "node_loss": node_loss,
+    "capacity_flap": capacity_flap,
+}
+
+
+def make(name: str, **kw) -> Scenario:
+    return SCENARIOS[name](**kw)

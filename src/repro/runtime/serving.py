@@ -43,6 +43,34 @@ from .migration import (
 SERVING_MODES = ("kill_restart", "live", "progressive", "fluid")
 
 
+def active_nodes(assign: Assignment) -> int:
+    """Number of nodes holding at least one bucket."""
+    return sum(1 for lo, hi in assign.intervals if hi > lo)
+
+
+def imbalance_ratio(assign: Assignment, w_t: np.ndarray) -> float:
+    """Load imbalance λ = max node load / (W / n_active) − 1.
+
+    The balance constraint (Def. 2.1) is λ ≤ τ; this is the raw signal the
+    control plane smooths and thresholds (control.Monitor)."""
+    w_t = np.asarray(w_t, dtype=np.float64)
+    loads = [w_t[lo:hi].sum() for lo, hi in assign.intervals if hi > lo]
+    if not loads:
+        return 0.0
+    total = float(w_t.sum())
+    if total <= 0:
+        return 0.0
+    return float(max(loads) / (total / len(loads)) - 1.0)
+
+
+def node_capacity(sim: SimConfig, tau: float, rate: float,
+                  n_active: int) -> float:
+    """Per-node drain capacity (tuples/s) the simulators provision: headroom
+    · (1+τ) · total rate / n_active — a τ-balanced assignment never
+    saturates a node in steady state (Def. 2.1)."""
+    return sim.headroom * (1 + tau) * max(rate, 1e-9) / max(n_active, 1)
+
+
 @dataclass
 class SimConfig:
     interval_s: float = 60.0         # paper: 1 interval = 1 hour; scaled
@@ -67,54 +95,100 @@ class IntervalMetrics:
     delivered: float = 0.0           # tuples drained this interval
     restored_bytes: float = 0.0      # checkpoint bytes re-read after a
     #                                  node loss (ft.recovery_plan interval)
+    imbalance: float = 0.0           # post-plan load imbalance λ (Def. 2.1)
+
+
+def strategy_windows(moves: List[Move], s_t: np.ndarray, sim: SimConfig,
+                     mode: str, max_inflight: int, fluid_batch: int,
+                     m: int) -> Tuple[np.ndarray, np.ndarray, float, float]:
+    """Per-bucket unavailability windows + duration + app freeze implied by
+    executing ``moves`` under a strategy.  Shared by the interval planner
+    below and by the control plane's migration-cost model
+    (control.MigrationPolicy), so the policy prices exactly the schedule
+    the simulator will execute.
+
+    Returns (un_from[m], un_until[m], duration_s, freeze_s)."""
+    un_from = np.zeros(m)
+    un_until = np.zeros(m)
+    if not moves:
+        return un_from, un_until, 0.0, 0.0
+    if mode == "kill_restart":
+        freeze = naive_duration(moves, sim.bw_bytes_per_s) + \
+            sim.restart_overhead_s
+        return un_from, un_until, freeze, freeze
+    budget = None
+    if mode == "progressive":
+        mx = s_t.max() if len(s_t) else 1.0
+        budget = max_inflight * mx
+    elif mode == "fluid":
+        budget = fluid_budget(s_t, fluid_batch)
+    phases = schedule_phases(moves, phase_budget=budget)
+    un_from, un_until, clock = bucket_windows(
+        phases, sim.bw_bytes_per_s, m, fluid=mode == "fluid")
+    return un_from, un_until, clock, 0.0
 
 
 def plan_interval_windows(planner: ElasticPlanner, assign: Assignment,
                           n_t: int, w_t: np.ndarray, s_t: np.ndarray,
                           sim: SimConfig, mode: str, tau: float,
                           max_inflight: int, fluid_batch: int,
-                          met: IntervalMetrics):
-    """One interval's migration decision: trigger (scale event or τ
-    violation), plan, and per-bucket unavailability windows.  Shared by the
-    scalar oracle (ElasticServingSim) and the vectorized engine
-    (simulator.VectorizedServingSim) so the two cannot drift.
+                          met: IntervalMetrics,
+                          replan: Optional[bool] = None):
+    """One interval's migration decision: trigger, plan, and per-bucket
+    unavailability windows.  Shared by the scalar oracle (ElasticServingSim)
+    and the vectorized engine (simulator.VectorizedServingSim) so the two
+    cannot drift.
+
+    ``replan`` is the control-plane override: ``None`` keeps the legacy
+    autonomous trigger (migrate on scale events AND on load-skew violations
+    — the paper's rebalancing trigger, §1/§2.1); ``True`` forces a re-plan
+    (a MigrationPolicy decided the gain beats the cost); ``False`` holds the
+    current assignment even through a violation (the policy decided *not*
+    to migrate — callers must then pass n_t == current node count).
 
     Returns (assign', unavailable_from[m], unavailable_until[m], freeze)."""
     m = assign.m
     unavailable_from = np.zeros(m)
     unavailable_until = np.zeros(m)
     freeze = 0.0
-    n_cur = sum(1 for lo, hi in assign.intervals if hi > lo)
-    # migrate on scale events AND on load-skew violations (the paper's
-    # rebalancing trigger, §1/§2.1)
-    if n_t != n_cur or not satisfies_balance(assign, w_t, n_t, tau):
+    n_cur = active_nodes(assign)
+    trigger = n_t != n_cur or not satisfies_balance(assign, w_t, n_t, tau)
+    if replan is not None:
+        trigger = replan
+    if trigger:
         plan = planner.plan(assign, n_t, w_t, s_t, tau=tau)
         moves = move_list(plan, s_t)
         met.migration_cost_bytes = plan.cost
-        if not moves:
-            # re-plan changed nothing (e.g. the planner legitimately left a
-            # target node empty): no transfer, no restart
-            pass
-        elif mode == "kill_restart":
-            freeze = naive_duration(moves, sim.bw_bytes_per_s) + \
-                sim.restart_overhead_s
-            met.migration_duration_s = freeze
-        else:
-            budget = None
-            if mode == "progressive":
-                mx = s_t.max() if len(s_t) else 1.0
-                budget = max_inflight * mx
-            elif mode == "fluid":
-                budget = fluid_budget(s_t, fluid_batch)
-            phases = schedule_phases(moves, phase_budget=budget)
-            unavailable_from, unavailable_until, clock = bucket_windows(
-                phases, sim.bw_bytes_per_s, m, fluid=mode == "fluid")
-            met.migration_duration_s = clock
+        # no moves: the re-plan changed nothing (e.g. the planner
+        # legitimately left a target node empty) — no transfer, no restart
+        unavailable_from, unavailable_until, clock, freeze = \
+            strategy_windows(moves, s_t, sim, mode, max_inflight,
+                             fluid_batch, m)
+        met.migration_duration_s = clock
+        if moves and freeze == 0.0:
             win = np.minimum(unavailable_until, sim.interval_s) - \
                 np.minimum(unavailable_from, sim.interval_s)
             met.forwarded = int((w_t / sim.interval_s * win).sum())
         assign = plan.new
+    met.imbalance = imbalance_ratio(assign, w_t)
     return assign, unavailable_from, unavailable_until, freeze
+
+
+def recover_interval(assign: Assignment, failed: set, n_t: int,
+                     w_t: np.ndarray, s_t: np.ndarray, tau: float,
+                     met: IntervalMetrics) -> Assignment:
+    """Node-loss recovery (ft.py), shared by both serving simulators:
+    survivors' state stays put where SSM can arrange it, lost buckets
+    restore from checkpoint wherever they land.  ``met.restored_bytes``
+    reports the strategy-independent checkpoint read;
+    ``met.migration_cost_bytes`` accumulates only the survivor network
+    moves.  Restore latency is not modeled in the drain — the restored
+    bytes are the paper-faithful cost signal."""
+    from .ft import recovery_plan, restored_bytes
+    met.restored_bytes = restored_bytes(assign, failed, s_t)
+    rec = recovery_plan(assign, failed, n_t, w_t, s_t, tau)
+    met.migration_cost_bytes += rec.cost
+    return rec.new
 
 
 class ElasticServingSim:
@@ -133,27 +207,62 @@ class ElasticServingSim:
         self.max_inflight = max_inflight
         self.tau = tau
         self.fluid_batch = fluid_batch
+        self.assign: Optional[Assignment] = None
+        self.queues = np.zeros(m)                  # per-bucket backlog items
+        self.t = 0
+
+    # -- stepped observe/act API (control.ControlLoop drives this) ----------
+    def reset(self, n0: int) -> "ElasticServingSim":
+        """Re-initialize to n0 evenly-cut nodes with empty queues."""
+        cuts = np.linspace(0, self.m, int(n0) + 1).round().astype(int)
+        self.assign = Assignment.from_boundaries(self.m, list(cuts))
+        self.queues = np.zeros(self.m)
+        self.t = 0
+        return self
+
+    @property
+    def bucket_backlog(self) -> np.ndarray:
+        """Per-bucket queued tuples right now (monitor input)."""
+        return self.queues
+
+    def step_interval(self, w_t: np.ndarray, s_t: np.ndarray,
+                      n_t: Optional[int] = None,
+                      failed: Optional[set] = None,
+                      replan: Optional[bool] = None,
+                      mode: Optional[str] = None,
+                      fluid_batch: Optional[int] = None,
+                      tau: Optional[float] = None) -> IntervalMetrics:
+        """Advance one interval: recover lost nodes, decide/plan/execute the
+        migration, drain.  All keyword overrides default to the autonomous
+        constructor-configured behavior; a ControlLoop passes explicit
+        decisions instead.  Call reset() first."""
+        if self.assign is None:
+            raise RuntimeError("call reset(n0) before step_interval()")
+        n_t = active_nodes(self.assign) if n_t is None else int(n_t)
+        met = IntervalMetrics(t=self.t, n_nodes=n_t)
+        if failed:
+            self.assign = recover_interval(self.assign, set(failed), n_t,
+                                           w_t, s_t, self.tau, met)
+        self.assign, unavailable_from, unavailable_until, freeze_until = \
+            plan_interval_windows(
+                self.planner, self.assign, n_t, w_t, s_t, self.sim,
+                mode if mode is not None else self.mode,
+                tau if tau is not None else self.tau,
+                self.max_inflight,
+                fluid_batch if fluid_batch is not None else self.fluid_batch,
+                met, replan=replan)
+        self._drain(self.t, w_t, self.assign, self.queues,
+                    unavailable_from, unavailable_until, freeze_until, met)
+        self.t += 1
+        return met
 
     def run(self, w: np.ndarray, s: np.ndarray, node_trace: Sequence[int]
             ) -> List[IntervalMetrics]:
         T, m = w.shape
         assert m == self.m
-        cuts = np.linspace(0, m, node_trace[0] + 1).round().astype(int)
-        assign = Assignment.from_boundaries(m, list(cuts))
-        out: List[IntervalMetrics] = []
-        queues = np.zeros(m)                       # per-bucket backlog items
-        for t in range(T):
-            n_t = int(node_trace[t])
-            met = IntervalMetrics(t=t, n_nodes=n_t)
-            assign, unavailable_from, unavailable_until, freeze_until = \
-                plan_interval_windows(self.planner, assign, n_t, w[t],
-                                      s[t], self.sim, self.mode, self.tau,
-                                      self.max_inflight, self.fluid_batch,
-                                      met)
-            out.append(self._drain(t, w[t], assign, queues,
-                                   unavailable_from, unavailable_until,
-                                   freeze_until, met))
-        return out
+        self.reset(int(node_trace[0]))
+        return [self.step_interval(w[t], s[t], int(node_trace[t]))
+                for t in range(T)]
 
     def _drain(self, t, w_t, assign, queues, unavailable_from,
                unavailable_until, freeze_until,

@@ -43,7 +43,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import Assignment, ElasticPlanner
-from .serving import IntervalMetrics, SimConfig, plan_interval_windows
+from .serving import (
+    IntervalMetrics, SimConfig, active_nodes, plan_interval_windows,
+    recover_interval,
+)
 
 MODES = ("kill_restart", "live", "progressive", "fluid")
 
@@ -134,57 +137,82 @@ class VectorizedServingSim:
         self.latency_weights: List[np.ndarray] = []
         self.latency_intervals: List[int] = []   # met.t per recorded batch
         self._jit_cache: Dict[tuple, object] = {}
+        self.assign: Optional[Assignment] = None
+        self.queues = np.zeros(m)
+        self.t = 0
 
     # -- migration planning (the exact scalar-sim logic, shared) -----------
     def _interval_windows(self, assign: Assignment, n_t: int,
                           w_t: np.ndarray, s_t: np.ndarray,
-                          met: IntervalMetrics
+                          met: IntervalMetrics,
+                          replan: Optional[bool] = None,
+                          mode: Optional[str] = None,
+                          fluid_batch: Optional[int] = None,
+                          tau: Optional[float] = None
                           ) -> Tuple[Assignment, np.ndarray, np.ndarray,
                                      float]:
-        return plan_interval_windows(self.planner, assign, n_t, w_t, s_t,
-                                     self.sim, self.mode, self.tau,
-                                     self.max_inflight, self.fluid_batch,
-                                     met)
+        return plan_interval_windows(
+            self.planner, assign, n_t, w_t, s_t, self.sim,
+            mode if mode is not None else self.mode,
+            tau if tau is not None else self.tau,
+            self.max_inflight,
+            fluid_batch if fluid_batch is not None else self.fluid_batch,
+            met, replan=replan)
 
-    def _recover(self, assign: Assignment, failed: set, n_t: int,
-                 w_t: np.ndarray, s_t: np.ndarray,
-                 met: IntervalMetrics) -> Assignment:
-        """Node-loss recovery (ft.py): survivors' state stays put where SSM
-        can arrange it, lost buckets restore from checkpoint wherever they
-        land.  ``met.restored_bytes`` reports the strategy-independent
-        checkpoint read; ``met.migration_cost_bytes`` accumulates only the
-        survivor network moves.  Restore latency is not modeled in the
-        drain — the restored bytes are the paper-faithful cost signal."""
-        from .ft import recovery_plan, restored_bytes
-        met.restored_bytes = restored_bytes(assign, failed, s_t)
-        rec = recovery_plan(assign, failed, n_t, w_t, s_t, self.tau)
-        met.migration_cost_bytes += rec.cost
-        return rec.new
+    # -- stepped observe/act API (control.ControlLoop drives this) ----------
+    def reset(self, n0: int) -> "VectorizedServingSim":
+        """Re-initialize to n0 evenly-cut nodes, empty queues, and fresh
+        latency samples."""
+        cuts = np.linspace(0, self.m, int(n0) + 1).round().astype(int)
+        self.assign = Assignment.from_boundaries(self.m, list(cuts))
+        self.queues = np.zeros(self.m)
+        self.t = 0
+        self.latency_values.clear()
+        self.latency_weights.clear()
+        self.latency_intervals.clear()
+        return self
+
+    @property
+    def bucket_backlog(self) -> np.ndarray:
+        """Per-bucket queued tuples right now (monitor input)."""
+        return self.queues
+
+    def step_interval(self, w_t: np.ndarray, s_t: np.ndarray,
+                      n_t: Optional[int] = None,
+                      failed: Optional[set] = None,
+                      replan: Optional[bool] = None,
+                      mode: Optional[str] = None,
+                      fluid_batch: Optional[int] = None,
+                      tau: Optional[float] = None) -> IntervalMetrics:
+        """Advance one interval: recover lost nodes, decide/plan/execute the
+        migration, drain.  Overrides default to the autonomous constructor
+        configuration; a ControlLoop passes explicit per-decision values
+        (replan yes/no, strategy, fluid_batch, plan-τ).  Call reset()
+        first."""
+        if self.assign is None:
+            raise RuntimeError("call reset(n0) before step_interval()")
+        n_t = active_nodes(self.assign) if n_t is None else int(n_t)
+        met = IntervalMetrics(t=self.t, n_nodes=n_t)
+        if failed:
+            self.assign = recover_interval(self.assign, set(failed), n_t,
+                                           w_t, s_t, self.tau, met)
+        self.assign, un_from, un_until, freeze = self._interval_windows(
+            self.assign, n_t, w_t, s_t, met, replan=replan, mode=mode,
+            fluid_batch=fluid_batch, tau=tau)
+        self.queues = self._drain(w_t, self.assign, self.queues, un_from,
+                                  un_until, freeze, met)
+        self.t += 1
+        return met
 
     def run(self, w: np.ndarray, s: np.ndarray,
             node_trace: Sequence[int]) -> List[IntervalMetrics]:
         T, m = w.shape
         assert m == self.m
         # samples are per-run: interval ids restart at 0 every run
-        self.latency_values.clear()
-        self.latency_weights.clear()
-        self.latency_intervals.clear()
-        cuts = np.linspace(0, m, int(node_trace[0]) + 1).round().astype(int)
-        assign = Assignment.from_boundaries(m, list(cuts))
-        queues = np.zeros(m)
-        out: List[IntervalMetrics] = []
-        for t in range(T):
-            n_t = int(node_trace[t])
-            met = IntervalMetrics(t=t, n_nodes=n_t)
-            if t in self.failures:
-                assign = self._recover(assign, set(self.failures[t]), n_t,
-                                       w[t], s[t], met)
-            assign, un_from, un_until, freeze = self._interval_windows(
-                assign, n_t, w[t], s[t], met)
-            queues = self._drain(w[t], assign, queues, un_from, un_until,
-                                 freeze, met)
-            out.append(met)
-        return out
+        self.reset(int(node_trace[0]))
+        return [self.step_interval(w[t], s[t], int(node_trace[t]),
+                                   failed=self.failures.get(t))
+                for t in range(T)]
 
     # -- vectorized drain ---------------------------------------------------
     def _drain(self, w_t: np.ndarray, assign: Assignment,
@@ -299,13 +327,25 @@ class VectorizedServingSim:
 
 def weighted_percentile(values: np.ndarray, weights: np.ndarray,
                         q: float) -> float:
-    """q-th percentile (0..100) of a served-weighted latency sample."""
+    """q-th percentile (0..100) of a served-weighted latency sample: the
+    smallest value whose cumulative weight reaches q% of the total."""
     if len(values) == 0:
         return 0.0
     order = np.argsort(values)
     v, wt = values[order], weights[order]
     cum = np.cumsum(wt)
-    return float(v[np.searchsorted(cum, q / 100.0 * cum[-1])])
+    total = float(cum[-1])
+    if total <= 0:
+        return 0.0
+    target = q / 100.0 * total
+    if target <= 0:
+        # q=0: first value carrying any weight (skip a zero-weight head)
+        idx = int(np.searchsorted(cum, 0.0, side="right"))
+    else:
+        idx = int(np.searchsorted(cum, target, side="left"))
+    # float round-off (q=100 with a zero-weight tail, or target a hair
+    # above cum[-1]) can push searchsorted past the last element — clamp
+    return float(v[min(idx, len(v) - 1)])
 
 
 # ---------------------------------------------------------------------------
@@ -355,6 +395,121 @@ class ChainedDataflowSim:
         self.remaps = [None] + [
             route(np.arange(m), m, seed=sp.route_seed + 1 + i)
             for i, sp in enumerate(self.stages[1:])]
+        self.sims = [VectorizedServingSim(
+            m, self.sim,
+            sp.planner or ElasticPlanner(policy="greedy"),
+            mode=sp.mode, max_inflight=sp.max_inflight, tau=sp.tau,
+            fluid_batch=sp.fluid_batch) for sp in self.stages]
+        self.assigns: List[Assignment] = []
+        self.queues: List[np.ndarray] = []
+        self.inflow: List[np.ndarray] = []         # tuples landing next slot
+        self.t = 0
+
+    # -- stepped observe/act API --------------------------------------------
+    def reset(self, n0) -> "ChainedDataflowSim":
+        """Re-initialize every stage to ``n0`` (int, or per-stage sequence)
+        evenly-cut nodes with empty queues."""
+        S = len(self.stages)
+        n0s = [int(n0)] * S if np.ndim(n0) == 0 else [int(x) for x in n0]
+        assert len(n0s) == S
+        self.assigns = []
+        for i in range(S):
+            cuts = np.linspace(0, self.m, n0s[i] + 1).round()
+            self.assigns.append(
+                Assignment.from_boundaries(self.m, list(cuts.astype(int))))
+        self.queues = [np.zeros(self.m) for _ in range(S)]
+        self.inflow = [np.zeros(self.m) for _ in range(S)]
+        self.t = 0
+        return self
+
+    @property
+    def final_queues(self) -> List[np.ndarray]:
+        return self.queues
+
+    @property
+    def final_inflow(self) -> List[np.ndarray]:
+        return self.inflow
+
+    def step_interval(self, w_t: np.ndarray, s_t: np.ndarray, n_t=None,
+                      replan: Optional[bool] = None
+                      ) -> List[IntervalMetrics]:
+        """Advance the whole chain one interval; returns per-stage metrics.
+        ``n_t``: int shared by every stage or a per-stage sequence (None
+        keeps each stage's current node count); ``replan`` is forwarded to
+        every stage's migration trigger (control-plane override)."""
+        if not self.assigns:
+            raise RuntimeError("call reset(n0) before step_interval()")
+        S = len(self.stages)
+        if n_t is None:
+            n_ts = [active_nodes(a) for a in self.assigns]
+        elif np.ndim(n_t) == 0:
+            n_ts = [int(n_t)] * S
+        else:
+            n_ts = [int(x) for x in n_t]
+        K = self.sim.slots_per_interval
+        dt = self.sim.interval_s / K
+        # per-interval workload estimate seen by each stage: stage 0 sees
+        # w_t, downstream stages see the upstream interval totals re-routed
+        w_stage = [w_t]
+        for i in range(1, S):
+            w_stage.append(np.bincount(self.remaps[i],
+                                       weights=w_stage[i - 1],
+                                       minlength=self.m))
+        stage_env = []
+        for i in range(S):
+            met = IntervalMetrics(t=self.t, n_nodes=n_ts[i])
+            s_i = s_t * self.stages[i].state_scale
+            self.assigns[i], un_from, un_until, freeze = \
+                self.sims[i]._interval_windows(self.assigns[i], n_ts[i],
+                                               w_stage[i], s_i, met,
+                                               replan=replan)
+            owner, n_seg, cap = _node_env(self.assigns[i], w_stage[i],
+                                          self.sim, self.stages[i].tau)
+            stage_env.append(dict(met=met, un_from=un_from,
+                                  un_until=un_until, freeze=freeze,
+                                  owner=owner, n_seg=n_seg,
+                                  cap=cap, lat_num=0.0, lat_den=0.0,
+                                  max_lat=0.0))
+        arr0 = w_t / self.sim.interval_s * dt
+        queues, inflow = self.queues, self.inflow
+        for k in range(K):
+            now = k * dt
+            # snapshot: stage i's slot-k output lands at stage i+1 in
+            # slot k+1 (one-hop pipeline delay)
+            adds = [arr0] + [inflow[i] for i in range(1, S)]
+            for i in range(S):
+                env = stage_env[i]
+                queues[i] += adds[i]
+                avail = _avail_mask(now, env["un_from"],
+                                    env["un_until"], env["freeze"])
+                drained, node_q, served = slot_step(
+                    queues[i], env["owner"], env["n_seg"],
+                    env["cap"] * dt, avail)
+                queues[i] -= drained
+                if i + 1 < S:
+                    inflow[i + 1] = np.bincount(
+                        self.remaps[i + 1], weights=drained,
+                        minlength=self.m)
+                sv = served.sum()
+                if sv > 0:
+                    wait = node_q / env["cap"]
+                    lat = wait + self.sim.service_s
+                    act = served > 0
+                    env["lat_num"] += float((served * lat)[act].sum())
+                    env["lat_den"] += float(served[act].sum())
+                    env["max_lat"] = max(env["max_lat"],
+                                         float(lat[act].max()))
+                    env["met"].delivered += float(sv)
+        out = []
+        for i in range(S):
+            env = stage_env[i]
+            met = env["met"]
+            met.mean_response_s = env["lat_num"] / max(env["lat_den"], 1e-12)
+            met.max_response_s = env["max_lat"]
+            met.dropped_capacity = float(queues[i].sum())
+            out.append(met)
+        self.t += 1
+        return out
 
     def run(self, w: np.ndarray, s: np.ndarray,
             node_traces) -> List[List[IntervalMetrics]]:
@@ -367,83 +522,13 @@ class ChainedDataflowSim:
         traces = node_traces if isinstance(node_traces, (list, tuple)) and \
             np.ndim(node_traces[0]) > 0 else [node_traces] * S
         assert len(traces) == S
-        sims = [VectorizedServingSim(
-            m, self.sim,
-            sp.planner or ElasticPlanner(policy="greedy"),
-            mode=sp.mode, max_inflight=sp.max_inflight, tau=sp.tau,
-            fluid_batch=sp.fluid_batch) for sp in self.stages]
-        assigns = []
-        for i in range(S):
-            cuts = np.linspace(0, m, int(traces[i][0]) + 1).round()
-            assigns.append(
-                Assignment.from_boundaries(m, list(cuts.astype(int))))
-        queues = [np.zeros(m) for _ in range(S)]
-        inflow = [np.zeros(m) for _ in range(S)]   # tuples landing next slot
+        self.reset([int(tr[0]) for tr in traces])
         out: List[List[IntervalMetrics]] = [[] for _ in range(S)]
-        K = self.sim.slots_per_interval
-        dt = self.sim.interval_s / K
-        # per-interval workload estimate seen by each stage: stage 0 sees w,
-        # downstream stages see the upstream interval totals re-routed
         for t in range(T):
-            w_stage = [w[t]]
-            for i in range(1, S):
-                w_stage.append(np.bincount(self.remaps[i],
-                                           weights=w_stage[i - 1],
-                                           minlength=m))
-            stage_env = []
+            mets = self.step_interval(w[t], s[t],
+                                      [int(tr[t]) for tr in traces])
             for i in range(S):
-                n_t = int(traces[i][t])
-                met = IntervalMetrics(t=t, n_nodes=n_t)
-                s_t = s[t] * self.stages[i].state_scale
-                assigns[i], un_from, un_until, freeze = \
-                    sims[i]._interval_windows(assigns[i], n_t, w_stage[i],
-                                              s_t, met)
-                owner, n_seg, cap = _node_env(assigns[i], w_stage[i],
-                                              self.sim, self.stages[i].tau)
-                stage_env.append(dict(met=met, un_from=un_from,
-                                      un_until=un_until, freeze=freeze,
-                                      owner=owner, n_seg=n_seg,
-                                      cap=cap, lat_num=0.0, lat_den=0.0,
-                                      max_lat=0.0))
-            arr0 = w[t] / self.sim.interval_s * dt
-            for k in range(K):
-                now = k * dt
-                # snapshot: stage i's slot-k output lands at stage i+1 in
-                # slot k+1 (one-hop pipeline delay)
-                adds = [arr0] + [inflow[i] for i in range(1, S)]
-                for i in range(S):
-                    env = stage_env[i]
-                    queues[i] += adds[i]
-                    avail = _avail_mask(now, env["un_from"],
-                                        env["un_until"], env["freeze"])
-                    drained, node_q, served = slot_step(
-                        queues[i], env["owner"], env["n_seg"],
-                        env["cap"] * dt, avail)
-                    queues[i] -= drained
-                    if i + 1 < S:
-                        inflow[i + 1] = np.bincount(
-                            self.remaps[i + 1], weights=drained,
-                            minlength=m)
-                    sv = served.sum()
-                    if sv > 0:
-                        wait = node_q / env["cap"]
-                        lat = wait + self.sim.service_s
-                        act = served > 0
-                        env["lat_num"] += float((served * lat)[act].sum())
-                        env["lat_den"] += float(served[act].sum())
-                        env["max_lat"] = max(env["max_lat"],
-                                             float(lat[act].max()))
-                        env["met"].delivered += float(sv)
-            for i in range(S):
-                env = stage_env[i]
-                met = env["met"]
-                met.mean_response_s = env["lat_num"] / max(env["lat_den"],
-                                                           1e-12)
-                met.max_response_s = env["max_lat"]
-                met.dropped_capacity = float(queues[i].sum())
-                out[i].append(met)
-        self.final_queues = queues
-        self.final_inflow = inflow
+                out[i].append(mets[i])
         return out
 
     def end_to_end_latency(self, per_stage: List[List[IntervalMetrics]]

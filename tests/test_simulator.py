@@ -142,6 +142,29 @@ def test_weighted_percentile():
     assert weighted_percentile(np.zeros(0), np.zeros(0), 99) == 0.0
 
 
+def test_weighted_percentile_boundaries():
+    v = np.array([1.0, 2.0, 3.0, 4.0])
+    wt = np.array([1.0, 1.0, 1.0, 97.0])
+    # q=100: cumulative target equals the total weight — float round-off
+    # used to push searchsorted one past the end
+    assert weighted_percentile(v, wt, 100) == 4.0
+    assert weighted_percentile(v, np.ones(4), 100) == 4.0
+    # q=0 skips zero-weight heads: the smallest value with any mass
+    assert weighted_percentile(v, np.array([0.0, 5.0, 1.0, 1.0]), 0) == 2.0
+    assert weighted_percentile(v, np.ones(4), 0) == 1.0
+    # zero-weight tails never surface values beyond the carried mass
+    assert weighted_percentile(v, np.array([1.0, 1.0, 0.0, 0.0]), 100) == 2.0
+    # all-zero weights degrade to 0.0 rather than dividing by zero
+    assert weighted_percentile(v, np.zeros(4), 99) == 0.0
+    # irrational weights: q=100 must stay in bounds for any split
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        vals = np.sort(rng.random(17))
+        wts = rng.random(17) * np.pi
+        assert weighted_percentile(vals, wts, 100) == vals[-1]
+        assert weighted_percentile(vals, wts, 0) == vals[0]
+
+
 # ---------------------------------------------------------------------------
 # Chained multi-operator dataflow
 # ---------------------------------------------------------------------------
