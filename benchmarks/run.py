@@ -22,7 +22,8 @@ SUITES = [
     ("fig9_10_gamma", "Figs. 9/10 — γ vs cost & precompute"),
     ("fig11_live_migration", "Fig. 11 — live vs kill-restart"),
     ("fig12_fluid_vs_progressive",
-     "Fig. 12 — fluid vs progressive latency CDF (m=10k, vectorized)"),
+     "Fig. 12 — five-strategy migration frontier incl. batched_fluid "
+     "(m=10k, vectorized)"),
     ("fig13_controller",
      "Fig. 13 — closed-loop controller vs always/never-migrate"),
     ("migration_dryrun", "Dry-run — planner cost vs HLO collective bytes"),

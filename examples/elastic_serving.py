@@ -6,8 +6,8 @@ serving fleet scales elastically and survives a node failure.
 A qwen2.5-3b-family (reduced) model serves 24 concurrent requests.
 Requests hash into 24 KV buckets; each node owns a contiguous bucket
 interval (the paper's routing design).  Mid-decode we
-  (a) scale 2 → 4 nodes (SSM plans minimal KV movement, live executor
-      phases it),
+  (a) scale 2 → 4 nodes (SSM plans minimal KV movement, the batched_fluid
+      executor ships it in conflict-free matching rounds),
   (b) kill node 0 (failure recovery: survivors keep their KV in place,
       the lost buckets' cost is charged to checkpoint restore),
 and decoding continues throughout — generated tokens are bit-identical to
@@ -50,7 +50,7 @@ def run(events: bool):
         planner=ElasticPlanner(policy="ssm",
                                tau=TauSchedule(base=1.2, grow=0.2)),
         executor=MigrationExecutor(backend=SimBackend(bw_bytes_per_s=2e9),
-                                   mode="live"))
+                                   mode="batched_fluid", fluid_batch=4))
     w = np.bincount(req_bucket, minlength=m).astype(float) + 1e-9
 
     step_fn = jax.jit(lambda p, c, t, pos: decode_step(p, cfg, t, pos, c))
@@ -61,7 +61,8 @@ def run(events: bool):
             plan, rep = ctl.scale(4, w, op_state)
             print(f"  step {g}: scale 2→4 — moved "
                   f"{rep.bytes_moved/1e3:.0f} KB of KV in {rep.phases} "
-                  f"phases, {rep.duration_s*1e3:.2f} ms (simulated ICI)")
+                  f"matching rounds, {rep.duration_s*1e3:.2f} ms "
+                  f"(simulated ICI)")
         if events and g == 14:
             plan, rep = ctl.recover({0}, w, op_state)
             ck = ctl.events[-1].details["checkpoint_bytes"]

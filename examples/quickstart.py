@@ -8,8 +8,8 @@ buckets across 2 nodes.  We burst-load it, scale to 5 nodes, compare SSM's
 migration bytes against the ad-hoc (Storm-default) strategy, shrink back on
 the quiet period, and verify not a single count was lost.  A final section
 replays the same elastic events on the vectorized serving simulator to show
-what each migration strategy (kill_restart / live / progressive / fluid)
-costs in response-time spike.
+what each migration strategy (kill_restart / live / progressive / fluid /
+batched_fluid) costs in response-time spike.
 """
 import numpy as np
 
@@ -70,13 +70,17 @@ def main():
     s_trace = np.tile(app.state.bucket_bytes(), (T, 1))
     trace = np.array([2] * 4 + [5] * (T - 4))
     print("\nstrategy comparison on the serving simulator (scale 2→5):")
-    for mode in ("kill_restart", "live", "progressive", "fluid"):
+    for mode in ("kill_restart", "live", "progressive", "fluid",
+                 "batched_fluid"):
         sv = VectorizedServingSim(
             m, SimConfig(interval_s=10.0, bw_bytes_per_s=1e4),
-            ElasticPlanner(policy="ssm"), mode=mode, tau=0.6)
+            ElasticPlanner(policy="ssm"), mode=mode, tau=0.6,
+            fluid_batch=4 if mode == "batched_fluid" else 1)
         mets = sv.run(w_trace, s_trace, trace)
         spike = max(x.max_response_s for x in mets)
-        print(f"  {mode:13s} worst response {spike*1e3:9.1f} ms")
+        dur = sum(x.migration_duration_s for x in mets)
+        print(f"  {mode:13s} worst response {spike*1e3:9.1f} ms, "
+              f"migrating for {dur:5.2f} s")
 
 
 if __name__ == "__main__":

@@ -18,6 +18,10 @@ if [[ "${1:-}" == "fast" ]]; then
     # refreshed BENCH json must match the committed baselines
     python -m benchmarks.fig13_controller
     python scripts/check_bench.py BENCH_controller.json
+    # five-strategy migration frontier at smoke scale: batched_fluid must
+    # beat fluid on total migration time at fluid's tail latency
+    python -m benchmarks.fig12_fluid_vs_progressive --smoke
+    python scripts/check_bench.py BENCH_fig12_smoke.json
     # differential gate: every SSM solver (brute/simple/numpy/jit) must
     # agree on feasibility and optimal gain across the randomized stream
     exec python -m benchmarks.ssm_oracles

@@ -1,9 +1,10 @@
 from .state import BucketedState, owner_lookup, route
 from .migration import (
     JaxBackend, MigrationExecutor, MigrationReport, Move, SimBackend,
-    bucket_windows, fluid_budget, make_collective_migration,
-    make_migration_step, move_list, naive_duration, phase_duration,
-    plan_to_permutation, required_capacity, schedule_phases,
+    bucket_windows, fluid_budget, hopcroft_karp,
+    make_collective_migration, make_migration_step, move_list,
+    naive_duration, phase_duration, plan_to_permutation, required_capacity,
+    round_windows, schedule_phases, schedule_rounds,
 )
 from .checkpoint import CheckpointManager, RestoreReport
 from .ft import (
@@ -18,8 +19,8 @@ from .control import (
 from .elastic import ElasticController, ElasticEvent
 from .scenarios import SCENARIOS, Scenario
 from .serving import (
-    ElasticServingSim, ElasticWordCount, IntervalMetrics, SimConfig,
-    active_nodes, imbalance_ratio,
+    SERVING_MODES, ElasticServingSim, ElasticWordCount, IntervalMetrics,
+    SimConfig, active_nodes, imbalance_ratio, strategy_windows,
 )
 from .simulator import (
     ChainedDataflowSim, StageSpec, VectorizedServingSim, slot_step,
@@ -29,10 +30,11 @@ from .simulator import (
 __all__ = [
     "BucketedState", "owner_lookup", "route",
     "JaxBackend", "MigrationExecutor", "MigrationReport", "Move",
-    "SimBackend", "bucket_windows", "fluid_budget",
+    "SimBackend", "bucket_windows", "fluid_budget", "hopcroft_karp",
     "make_collective_migration", "make_migration_step",
     "move_list", "naive_duration", "phase_duration", "plan_to_permutation",
-    "required_capacity", "schedule_phases",
+    "required_capacity", "round_windows", "schedule_phases",
+    "schedule_rounds",
     "CheckpointManager", "RestoreReport",
     "SpeedTracker", "physical_migration_cost", "recovery_plan",
     "restored_bytes", "weighted_plan",
@@ -41,8 +43,9 @@ __all__ = [
     "PolicyConfig", "Signals",
     "ElasticController", "ElasticEvent",
     "SCENARIOS", "Scenario",
-    "ElasticServingSim", "ElasticWordCount", "IntervalMetrics", "SimConfig",
-    "active_nodes", "imbalance_ratio",
+    "SERVING_MODES", "ElasticServingSim", "ElasticWordCount",
+    "IntervalMetrics", "SimConfig", "active_nodes", "imbalance_ratio",
+    "strategy_windows",
     "ChainedDataflowSim", "StageSpec", "VectorizedServingSim", "slot_step",
     "weighted_percentile",
 ]

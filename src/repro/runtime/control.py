@@ -34,7 +34,7 @@ Pieces, each usable alone:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -237,18 +237,44 @@ def pause_cost_tuple_s(w_rate: np.ndarray, un_from: np.ndarray,
 
 def select_strategy(moves, bw_bytes_per_s: float, pause_budget_s: float
                     ) -> Tuple[str, int]:
-    """Pick strategy + fluid_batch so no bucket pauses longer than the
-    budget: if the whole transfer fits, one live bulk phase is fine;
-    otherwise fluid with the largest batch whose per-phase per-node bytes
-    (batch · max bucket) still land within the budget."""
+    """Pick the migration strategy + ``fluid_batch`` for one decision.
+
+    The contract: no bucket may pause longer than ``pause_budget_s``, and
+    subject to that the total migration should finish fast ("To Migrate or
+    not to Migrate": the cost side of the decision is both the pause and
+    how long the system stays mid-migration).
+
+    * If the whole transfer fits in the budget, one live bulk phase is
+      cheapest — nothing to schedule.
+    * Otherwise compute the largest ``batch`` whose per-phase per-node
+      bytes (batch · max bucket) still meet the budget.  When some node
+      has more than ``batch`` moves, fluid needs multiple phases — there
+      ``batched_fluid`` strictly dominates: its per-bucket pause is the
+      bucket's own transfer (≤ max bucket / BW ≤ the fluid phase width)
+      and its Hopcroft–Karp rounds keep every movable node busy while
+      amortizing the per-round coordination barrier
+      (``SimConfig.phase_sync_s``), so total migration time is shorter
+      when many buckets move (Megaphone's batched result).
+    * When one batch per node covers everything (≈ one phase), plain fluid
+      is equivalent and keeps the simpler schedule.
+
+    Returns ``(mode, fluid_batch)``."""
     if not moves:
         return "live", 1
     total = sum(mv.nbytes for mv in moves)
     mx = max(mv.nbytes for mv in moves)
     if total / bw_bytes_per_s <= pause_budget_s:
         return "live", 1
-    batch = int(pause_budget_s * bw_bytes_per_s // max(mx, 1.0))
-    return "fluid", max(batch, 1)
+    batch = max(int(pause_budget_s * bw_bytes_per_s // max(mx, 1.0)), 1)
+    sends: Dict[int, int] = {}
+    recvs: Dict[int, int] = {}
+    for mv in moves:
+        sends[mv.src] = sends.get(mv.src, 0) + 1
+        recvs[mv.dst] = recvs.get(mv.dst, 0) + 1
+    busiest = max(max(sends.values()), max(recvs.values()))
+    if busiest > batch:
+        return "batched_fluid", batch
+    return "fluid", batch
 
 
 # ---------------------------------------------------------------------------

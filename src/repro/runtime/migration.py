@@ -7,6 +7,13 @@ moves and run them — suspended, live, or progressive.
                          downlink bytes per phase are balanced; total time
                          ≈ Σ_phase max_node(bytes)/BW instead of Σ all bytes
                          through one bottleneck link.
+* ``schedule_rounds``  — Megaphone-style conflict-free parallel rounds:
+                         each round is a maximum bipartite matching
+                         (``hopcroft_karp``) over links with pending moves,
+                         so every node sends at most one bucket batch and
+                         receives at most one per round; ``round_windows``
+                         turns the rounds into per-bucket pause windows
+                         where a bucket stops only for its own transfer.
 * ``SimBackend``       — byte/clock accounting (benchmarks fig8/fig11).
 * ``JaxBackend``       — actually moves bucket pytrees between jax devices
                          with device_put (examples; single-host scale).
@@ -117,7 +124,7 @@ def fluid_budget(bucket_bytes: np.ndarray, batch: int) -> float:
 
 
 def bucket_windows(phases: Sequence[Sequence[Move]], bw_bytes_per_s: float,
-                   m: int, fluid: bool = False
+                   m: int, fluid: bool = False, sync_s: float = 0.0
                    ) -> Tuple[np.ndarray, np.ndarray, float]:
     """Per-bucket unavailability windows [from, until) implied by running the
     phases back-to-back, plus the total migration duration.
@@ -127,6 +134,13 @@ def bucket_windows(phases: Sequence[Sequence[Move]], bw_bytes_per_s: float,
     opens at 0 and closes when its phase lands.  With ``fluid=True``
     (Megaphone, Hoffmann et al. 1812.01371) a bucket keeps processing until
     its own phase starts: the window is exactly its phase's [start, end).
+
+    ``sync_s`` is the per-phase coordination cost (the routing-table update
+    every node must apply before the next phase may start — §5.2's routing
+    table, Megaphone's reconfiguration broadcast).  It extends the clock
+    after every phase (including the last: the final update still has to
+    propagate) but pauses no bucket — tuples routed with a stale table are
+    forwarded, which the simulators charge separately.
     """
     un_from = np.zeros(m)
     un_until = np.zeros(m)
@@ -136,7 +150,148 @@ def bucket_windows(phases: Sequence[Sequence[Move]], bw_bytes_per_s: float,
         for mv in ph:
             un_from[mv.bucket] = clock if fluid else 0.0
             un_until[mv.bucket] = clock + dur
-        clock += dur
+        clock += dur + sync_s
+    return un_from, un_until, clock
+
+
+# ---------------------------------------------------------------------------
+# Batched-fluid rounds (Megaphone: conflict-free parallel mini-migrations)
+# ---------------------------------------------------------------------------
+
+def hopcroft_karp(adj: Dict[int, Sequence[int]]) -> Dict[int, int]:
+    """Maximum bipartite matching, O(E·√V) (Hopcroft–Karp, pure python).
+
+    ``adj`` maps left vertices (sender node ids) to the right vertices
+    (receiver node ids) they have an edge to; the two sides are separate
+    namespaces, so a node acting as both sender and receiver may appear on
+    both sides under the same id.  Returns the left→right matching as a
+    dict.  Deterministic: vertices are scanned in sorted order, so runs are
+    reproducible and the simulators' differential tests stay exact.
+    """
+    from collections import deque
+
+    INF = float("inf")
+    left = sorted(adj)
+    edges = {u: sorted(set(adj[u])) for u in left}
+    match_l: Dict[int, Optional[int]] = {u: None for u in left}
+    match_r: Dict[int, Optional[int]] = {}
+    dist: Dict[int, float] = {}
+
+    def bfs() -> bool:
+        q = deque()
+        for u in left:
+            if match_l[u] is None:
+                dist[u] = 0.0
+                q.append(u)
+            else:
+                dist[u] = INF
+        found = False
+        while q:
+            u = q.popleft()
+            for v in edges[u]:
+                w = match_r.get(v)
+                if w is None:
+                    found = True
+                elif dist[w] == INF:
+                    dist[w] = dist[u] + 1.0
+                    q.append(w)
+        return found
+
+    def dfs(u: int) -> bool:
+        for v in edges[u]:
+            w = match_r.get(v)
+            if w is None or (dist[w] == dist[u] + 1.0 and dfs(w)):
+                match_l[u] = v
+                match_r[v] = u
+                return True
+        dist[u] = INF
+        return False
+
+    while bfs():
+        for u in left:
+            if match_l[u] is None:
+                dfs(u)
+    return {u: v for u, v in match_l.items() if v is not None}
+
+
+def schedule_rounds(moves: Sequence[Move], batch: int = 1
+                    ) -> List[List[Move]]:
+    """Conflict-free parallel rounds (Megaphone's batched migration).
+
+    Group the moves by directed link (src, dst); while any link has pending
+    buckets, build a maximum matching over those links with Hopcroft–Karp
+    and let every matched link ship one *bucket batch* that round: its
+    largest pending buckets up to ``batch · max(bucket bytes)`` bytes
+    (always at least one) — the same per-node in-flight budget
+    ``fluid_budget`` gives the fluid strategy, so the two knobs are
+    directly comparable.  Each node sends at most one batch and receives
+    at most one per round; no two links share an endpoint, so every
+    transfer in a round proceeds at full per-link bandwidth and the round
+    lasts exactly as long as its slowest link.
+
+    Compared to ``schedule_phases`` (greedy per-node byte packing), the
+    matching keeps every movable node busy every round and the batch
+    amortizes the per-round coordination barrier
+    (``SimConfig.phase_sync_s``) that per-bucket fluid pays once per
+    phase.  Rounds cover exactly ``moves``: no bucket dropped or shipped
+    twice.
+    """
+    if not moves:
+        return []
+    cap = max(int(batch), 1) * max(mv.nbytes for mv in moves)
+    pending: Dict[Tuple[int, int], List[Move]] = {}
+    for mv in moves:
+        pending.setdefault((mv.src, mv.dst), []).append(mv)
+    for q in pending.values():
+        q.sort(key=lambda mv: (-mv.nbytes, mv.bucket))
+    rounds: List[List[Move]] = []
+    while pending:
+        adj: Dict[int, List[int]] = {}
+        for src, dst in pending:
+            adj.setdefault(src, []).append(dst)
+        matching = hopcroft_karp(adj)
+        rnd: List[Move] = []
+        for src in sorted(matching):
+            link = (src, matching[src])
+            q = pending[link]
+            take, sent = 1, q[0].nbytes          # ≥ 1 move per round
+            while take < len(q) and sent + q[take].nbytes <= cap:
+                sent += q[take].nbytes
+                take += 1
+            rnd.extend(q[:take])
+            del q[:take]
+            if not q:
+                del pending[link]
+        rounds.append(rnd)    # matching is non-empty while moves pend
+    return rounds
+
+
+def round_windows(rounds: Sequence[Sequence[Move]], bw_bytes_per_s: float,
+                  m: int, sync_s: float = 0.0
+                  ) -> Tuple[np.ndarray, np.ndarray, float]:
+    """Per-bucket pause windows [start, end) for batched-fluid rounds.
+
+    Within a round every matched link ships its batch *sequentially*, so a
+    bucket is paused exactly for its own transfer (``nbytes``/BW) — the
+    fluid guarantee survives batching.  The round barrier advances the
+    clock by the slowest link's total plus ``sync_s`` (the routing-table
+    update between rounds; see ``bucket_windows``).  Returns
+    (pause_start[m], pause_end[m], total migration duration).
+    """
+    un_from = np.zeros(m)
+    un_until = np.zeros(m)
+    clock = 0.0
+    for rnd in rounds:
+        link_t: Dict[Tuple[int, int], float] = {}
+        dur = 0.0
+        for mv in rnd:
+            off = link_t.get((mv.src, mv.dst), 0.0)
+            t = mv.nbytes / bw_bytes_per_s
+            un_from[mv.bucket] = clock + off
+            un_until[mv.bucket] = clock + off + t
+            link_t[(mv.src, mv.dst)] = off + t
+            dur = max(dur, off + t)
+        clock += dur + sync_s
     return un_from, un_until, clock
 
 
@@ -204,11 +359,17 @@ class MigrationExecutor:
       fluid       — Megaphone-style per-bucket sequencing: ``fluid_batch``
                     buckets per node per phase (default 1), each bucket
                     paused only for its own transfer window.
+      batched_fluid — Megaphone's batched variant: conflict-free parallel
+                    rounds (``schedule_rounds``, Hopcroft–Karp matching);
+                    each node sends/receives at most one ``fluid_batch``-
+                    bucket batch per round, each bucket paused only for its
+                    own transfer.
       kill_restart— alias of suspend (full stop; the serving simulators
                     additionally charge the restart overhead).
     """
 
-    MODES = ("suspend", "kill_restart", "live", "progressive", "fluid")
+    MODES = ("suspend", "kill_restart", "live", "progressive", "fluid",
+             "batched_fluid")
 
     def __init__(self, backend=None, mode: str = "live",
                  max_inflight: int = 4, fluid_batch: int = 1):
@@ -230,6 +391,8 @@ class MigrationExecutor:
         elif self.mode == "fluid":
             phases = schedule_phases(
                 moves, phase_budget=fluid_budget(bb, self.fluid_batch))
+        elif self.mode == "batched_fluid":
+            phases = schedule_rounds(moves, batch=self.fluid_batch)
         elif self.mode in ("suspend", "kill_restart"):
             phases = [list(moves)] if moves else []   # one bulk transfer
         else:

@@ -4,7 +4,7 @@ deterministic fluid simulation + the word-count quickstart app.
 The simulator reproduces the paper's Fig. 8/11 methodology: items arrive per
 interval per bucket, nodes drain their buckets' queues at fixed capacity,
 and migrations make "to move in" buckets unavailable at the destination
-until their phase lands.  Four migration designs are modeled:
+until their phase lands.  Five migration designs are modeled:
 
 * kill_restart — Storm default (paper §5 intro): the whole app stops for the
                  full state transfer + restart overhead.
@@ -17,6 +17,12 @@ until their phase lands.  Four migration designs are modeled:
                  sequencing: each bucket pauses only for its own transfer
                  window; ``fluid_batch`` interpolates back toward
                  progressive/live.
+* batched_fluid — Megaphone's batched variant: conflict-free parallel
+                 rounds (maximum Hopcroft–Karp matchings — each node sends
+                 and receives at most one ``fluid_batch``-bucket batch per
+                 round), keeping fluid's per-bucket pause while amortizing
+                 the per-round coordination barrier (``phase_sync_s``) so
+                 total migration time shrinks when many buckets move.
 
 This scalar per-node loop is kept as the small-instance differential-test
 oracle; the production array engine is repro.runtime.simulator
@@ -37,10 +43,12 @@ from repro.core import (
 )
 from .migration import (
     MigrationExecutor, Move, bucket_windows, fluid_budget, move_list,
-    naive_duration, phase_duration, schedule_phases,
+    naive_duration, phase_duration, round_windows, schedule_phases,
+    schedule_rounds,
 )
 
-SERVING_MODES = ("kill_restart", "live", "progressive", "fluid")
+SERVING_MODES = ("kill_restart", "live", "progressive", "fluid",
+                 "batched_fluid")
 
 
 def active_nodes(assign: Assignment) -> int:
@@ -80,6 +88,10 @@ class SimConfig:
     restart_overhead_s: float = 20.0  # JVM/process restart (paper §5.1)
     forward_hop_s: float = 0.002
     service_s: float = 0.001
+    phase_sync_s: float = 0.0        # per-phase/round routing-table update
+    #                                  barrier (Megaphone reconfiguration);
+    #                                  extends the migration clock, pauses
+    #                                  no bucket
 
 
 @dataclass
@@ -101,13 +113,37 @@ class IntervalMetrics:
 def strategy_windows(moves: List[Move], s_t: np.ndarray, sim: SimConfig,
                      mode: str, max_inflight: int, fluid_batch: int,
                      m: int) -> Tuple[np.ndarray, np.ndarray, float, float]:
-    """Per-bucket unavailability windows + duration + app freeze implied by
-    executing ``moves`` under a strategy.  Shared by the interval planner
-    below and by the control plane's migration-cost model
-    (control.MigrationPolicy), so the policy prices exactly the schedule
-    the simulator will execute.
+    """Compile ``moves`` into the pause schedule a strategy would execute.
 
-    Returns (un_from[m], un_until[m], duration_s, freeze_s)."""
+    This is the single point where a strategy name becomes concrete
+    per-bucket unavailability windows, shared by both serving simulators
+    (via ``plan_interval_windows``) and by the control plane's migration
+    cost model (``control.MigrationPolicy._score_plan``) — so the policy
+    prices exactly the schedule the simulator will execute.
+
+    Strategy → schedule (see runtime/README.md for the catalog):
+
+    * ``kill_restart``  — one bulk transfer; the whole app freezes for the
+      transfer plus ``sim.restart_overhead_s``.
+    * ``live``          — Rödiger phases, per-node byte budget
+      total/#endpoints; window ``[0, phase end)``.
+    * ``progressive``   — phases with budget ``max_inflight · max(s_t)``;
+      window ``[0, phase end)``.
+    * ``fluid``         — phases with budget ``fluid_batch · max(s_t)``;
+      window = own phase's ``[start, end)``.
+    * ``batched_fluid`` — Hopcroft–Karp matching rounds
+      (``migration.schedule_rounds``), ``fluid_batch`` buckets per link
+      per round; window = the bucket's **own transfer** within its round
+      (``migration.round_windows``).
+
+    Phase-structured strategies charge ``sim.phase_sync_s`` per phase/round
+    to the migration clock (routing-table update barrier); it pauses no
+    bucket, so it shows up in ``duration_s`` but not in the windows.
+
+    Returns ``(un_from[m], un_until[m], duration_s, freeze_s)``: a bucket
+    is unavailable during ``[un_from, un_until)`` seconds into the
+    interval; ``freeze_s`` > 0 means the whole app is frozen until then
+    (kill_restart only)."""
     un_from = np.zeros(m)
     un_until = np.zeros(m)
     if not moves:
@@ -116,6 +152,11 @@ def strategy_windows(moves: List[Move], s_t: np.ndarray, sim: SimConfig,
         freeze = naive_duration(moves, sim.bw_bytes_per_s) + \
             sim.restart_overhead_s
         return un_from, un_until, freeze, freeze
+    if mode == "batched_fluid":
+        rounds = schedule_rounds(moves, batch=fluid_batch)
+        un_from, un_until, clock = round_windows(
+            rounds, sim.bw_bytes_per_s, m, sync_s=sim.phase_sync_s)
+        return un_from, un_until, clock, 0.0
     budget = None
     if mode == "progressive":
         mx = s_t.max() if len(s_t) else 1.0
@@ -124,7 +165,8 @@ def strategy_windows(moves: List[Move], s_t: np.ndarray, sim: SimConfig,
         budget = fluid_budget(s_t, fluid_batch)
     phases = schedule_phases(moves, phase_budget=budget)
     un_from, un_until, clock = bucket_windows(
-        phases, sim.bw_bytes_per_s, m, fluid=mode == "fluid")
+        phases, sim.bw_bytes_per_s, m, fluid=mode == "fluid",
+        sync_s=sim.phase_sync_s)
     return un_from, un_until, clock, 0.0
 
 

@@ -24,10 +24,14 @@ aggregation is a bincount/segment-sum over ``owner`` — no Python loop over
 nodes or buckets.
 
 Migration strategies (see serving.py / README.md): ``kill_restart``,
-``live``, ``progressive``, and ``fluid`` — Megaphone-style (Hoffmann et
-al., 1812.01371) per-bucket sequencing where each bucket pauses only for
-its own transfer window; ``fluid_batch`` interpolates kill_restart ↔
-progressive ↔ fluid through the same ``schedule_phases`` machinery.
+``live``, ``progressive``, ``fluid`` — Megaphone-style (Hoffmann et al.,
+1812.01371) per-bucket sequencing where each bucket pauses only for its
+own transfer window, ``fluid_batch`` interpolating kill_restart ↔
+progressive ↔ fluid through the same ``schedule_phases`` machinery — and
+``batched_fluid``, Megaphone's batched variant: conflict-free parallel
+rounds built as maximum Hopcroft–Karp matchings (each node sends/receives
+at most one ``fluid_batch``-bucket batch per round) with fluid's
+per-bucket pause windows (``migration.schedule_rounds``).
 
 ``ChainedDataflowSim`` lifts the engine to chained multi-operator dataflows
 (map → aggregate → join): every stage has its own assignment, strategy and
@@ -44,11 +48,11 @@ import numpy as np
 
 from repro.core import Assignment, ElasticPlanner
 from .serving import (
-    IntervalMetrics, SimConfig, active_nodes, plan_interval_windows,
-    recover_interval,
+    SERVING_MODES, IntervalMetrics, SimConfig, active_nodes,
+    plan_interval_windows, recover_interval,
 )
 
-MODES = ("kill_restart", "live", "progressive", "fluid")
+MODES = SERVING_MODES
 
 
 # ---------------------------------------------------------------------------

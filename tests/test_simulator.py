@@ -13,7 +13,7 @@ from repro.runtime import (
     VectorizedServingSim, weighted_percentile,
 )
 
-MODES = ("kill_restart", "live", "progressive", "fluid")
+MODES = ("kill_restart", "live", "progressive", "fluid", "batched_fluid")
 
 
 def _metrics_matrix(mets):
@@ -54,7 +54,7 @@ def test_vectorized_matches_scalar_oracle(mode):
 def test_vectorized_matches_scalar_oracle_property(m, seed, n_lo, span):
     w, s, trace = _mk_trace(m, 10, seed=seed, n_lo=n_lo, n_hi=n_lo + span)
     sim = SimConfig(slots_per_interval=20)
-    for mode in ("live", "fluid"):
+    for mode in ("live", "fluid", "batched_fluid"):
         a = _metrics_matrix(ElasticServingSim(
             m, sim, ElasticPlanner(policy="ssm"), mode=mode).run(w, s, trace))
         b = _metrics_matrix(VectorizedServingSim(
