@@ -22,6 +22,10 @@ if [[ "${1:-}" == "fast" ]]; then
     # beat fluid on total migration time at fluid's tail latency
     python -m benchmarks.fig12_fluid_vs_progressive --smoke
     python scripts/check_bench.py BENCH_fig12_smoke.json
+    # real-state serving resize: the live elastic event must move the
+    # actual KV cache bit-identically (tokens match a no-resize run)
+    python -m benchmarks.fig14_serving_resize --smoke
+    python scripts/check_bench.py BENCH_serving_smoke.json
     # differential gate: every SSM solver (brute/simple/numpy/jit) must
     # agree on feasibility and optimal gain across the randomized stream
     exec python -m benchmarks.ssm_oracles

@@ -293,6 +293,35 @@ def cache_specs(cfg: ModelConfig, mesh: Mesh, cache_shape,
     return jax.tree_util.tree_map_with_path(leaf_spec, cache_shape)
 
 
+def elastic_cache_specs(cfg: ModelConfig, mesh: Mesh, cache_shape,
+                        axis: str = "data") -> Any:
+    """Decode-cache specs for the elastic serving path: the REQUEST axis of
+    every leaf goes over ``axis`` (nodes = mesh slices along it), everything
+    else replicated.  Which axis is the request axis comes from the same
+    rule ``DeviceBucketedState`` uses (``runtime.state.cache_batch_axis``:
+    stacked ``blocks``/``cross_k``/``cross_v`` leaves carry batch at axis 1,
+    ``tail`` leaves at axis 0) — the GSPMD counterpart of the per-node
+    shard layout, for the collective-migration dry run.  Leaves whose
+    request dim doesn't divide the axis size stay replicated (GSPMD would
+    otherwise pad unevenly)."""
+    from repro.runtime.state import cache_batch_axis
+    asz = int(np.prod([mesh.shape[a] for a in (
+        axis if isinstance(axis, tuple) else (axis,))]))
+
+    def leaf_spec(path, v):
+        names = [str(getattr(x, "key", getattr(x, "name",
+                                               getattr(x, "idx", x))))
+                 for x in path]
+        ax = cache_batch_axis(names)
+        nd = np.ndim(v)
+        entries = [None] * nd
+        if nd > ax and v.shape[ax] % max(asz, 1) == 0:
+            entries[ax] = axis
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shape)
+
+
 def to_named(tree, mesh: Mesh):
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), tree,

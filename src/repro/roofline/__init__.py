@@ -1,7 +1,11 @@
 from .hlo import HloCosts, analyze, parse_computations
-from .terms import HBM_BW, ICI_BW, PEAK_FLOPS, model_flops, roofline_terms
+from .terms import (
+    HBM_BW, ICI_BW, PEAK_FLOPS, migration_transfer_s, model_flops,
+    roofline_terms,
+)
 
 __all__ = [
     "HloCosts", "analyze", "parse_computations",
-    "HBM_BW", "ICI_BW", "PEAK_FLOPS", "model_flops", "roofline_terms",
+    "HBM_BW", "ICI_BW", "PEAK_FLOPS", "migration_transfer_s", "model_flops",
+    "roofline_terms",
 ]

@@ -82,6 +82,26 @@ def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
     return 2.0 * N_dec * tokens + self_attn_flops(tokens, ctx) + cross
 
 
+def migration_transfer_s(phase_link_bytes, interconnect: str = "ici"
+                         ) -> float:
+    """Roofline lower bound for a phased state migration.
+
+    ``phase_link_bytes``: the busiest-link bytes of each executed phase
+    (``MigrationReport.phase_link_bytes``) — a phase ends when its busiest
+    link drains, and phases run back-to-back, so the predicted transfer
+    time is the sum of per-phase busiest-link bytes over the interconnect
+    bandwidth: ``ici`` for device-to-device resharding (one v5e link,
+    matching the collective accounting above) or ``hbm`` for same-device
+    row copies (gather + scatter both hit HBM, hence the factor 2).
+    """
+    if interconnect == "ici":
+        return float(sum(b / ICI_BW for b in phase_link_bytes))
+    if interconnect == "hbm":
+        return float(sum(2.0 * b / HBM_BW for b in phase_link_bytes))
+    raise ValueError(f"interconnect must be 'ici' or 'hbm', "
+                     f"got {interconnect!r}")
+
+
 def roofline_terms(cfg: ModelConfig, shape: ShapeConfig, costs,
                    n_devices: int) -> Dict[str, float]:
     compute_s = costs.dot_flops / PEAK_FLOPS

@@ -1,10 +1,13 @@
-from .state import BucketedState, owner_lookup, route
+from .state import (
+    BucketedState, DeviceBucketedState, cache_batch_axes, owner_lookup,
+    route,
+)
 from .migration import (
     JaxBackend, MigrationExecutor, MigrationReport, Move, SimBackend,
     bucket_windows, fluid_budget, hopcroft_karp,
     make_collective_migration, make_migration_step, move_list,
     naive_duration, phase_duration, plan_to_permutation, required_capacity,
-    round_windows, schedule_phases, schedule_rounds,
+    round_windows, schedule_phases, schedule_rounds, verify_resharding,
 )
 from .checkpoint import CheckpointManager, RestoreReport
 from .ft import (
@@ -28,13 +31,14 @@ from .simulator import (
 )
 
 __all__ = [
-    "BucketedState", "owner_lookup", "route",
+    "BucketedState", "DeviceBucketedState", "cache_batch_axes",
+    "owner_lookup", "route",
     "JaxBackend", "MigrationExecutor", "MigrationReport", "Move",
     "SimBackend", "bucket_windows", "fluid_budget", "hopcroft_karp",
     "make_collective_migration", "make_migration_step",
     "move_list", "naive_duration", "phase_duration", "plan_to_permutation",
     "required_capacity", "round_windows", "schedule_phases",
-    "schedule_rounds",
+    "schedule_rounds", "verify_resharding",
     "CheckpointManager", "RestoreReport",
     "SpeedTracker", "physical_migration_cost", "recovery_plan",
     "restored_bytes", "weighted_plan",

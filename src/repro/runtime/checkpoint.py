@@ -61,11 +61,38 @@ def _unflatten(flat: Dict[str, np.ndarray], proto) -> Any:
     return flat[""] if "" in flat else next(iter(flat.values()))
 
 
+def _describe(tree) -> Any:
+    """JSON-able structure descriptor of a pytree (save-side companion of
+    ``_unflatten``: ``save`` flattens nested trees to ``a/b`` keys, so the
+    manifest must record the nesting to restore it losslessly)."""
+    if isinstance(tree, dict):
+        return {"kind": "dict",
+                "keys": {k: _describe(v) for k, v in tree.items()}}
+    if isinstance(tree, (list, tuple)):
+        return {"kind": "tuple" if isinstance(tree, tuple) else "list",
+                "items": [_describe(v) for v in tree]}
+    return {"kind": "leaf"}
+
+
+def _proto(desc) -> Any:
+    """Turn a ``_describe`` descriptor back into an ``_unflatten`` proto
+    (leaves are placeholders — only the container structure matters)."""
+    if desc["kind"] == "dict":
+        return {k: _proto(d) for k, d in desc["keys"].items()}
+    if desc["kind"] == "list":
+        return [_proto(d) for d in desc["items"]]
+    if desc["kind"] == "tuple":
+        return tuple(_proto(d) for d in desc["items"])
+    return None
+
+
 @dataclass
 class RestoreReport:
     plan: Optional[MigrationPlan]
     bytes_read: float            # storage reads (reassigned buckets)
     bytes_resident: float        # buckets reopened in place (no read)
+    files_read: int = 0          # bucket files actually opened
+    files_resident: int = 0      # buckets served from in-memory state
 
 
 class CheckpointManager:
@@ -78,6 +105,8 @@ class CheckpointManager:
     # -- save ---------------------------------------------------------------
     def save(self, step: int, state: BucketedState, assignment: Assignment,
              extra: Any = None, async_: bool = False) -> None:
+        descs = [_describe(b) for b in state.buckets]
+        extra_desc = _describe(extra) if extra is not None else None
         if async_:
             self.wait()
             snap_buckets = [
@@ -86,19 +115,22 @@ class CheckpointManager:
             extra_flat = _flatten(extra) if extra is not None else None
             self._thread = threading.Thread(
                 target=self._write, args=(step, snap_buckets, assignment,
-                                          extra_flat), daemon=True)
+                                          extra_flat, descs, extra_desc),
+                daemon=True)
             self._thread.start()
         else:
             snap = [_flatten(b) for b in state.buckets]
             self._write(step, snap, assignment,
-                        _flatten(extra) if extra is not None else None)
+                        _flatten(extra) if extra is not None else None,
+                        descs, extra_desc)
 
     def wait(self) -> None:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
 
-    def _write(self, step, flat_buckets, assignment, extra_flat):
+    def _write(self, step, flat_buckets, assignment, extra_flat,
+               descs=None, extra_desc=None):
         final = self.dir / f"step_{step}"
         tmp = Path(tempfile.mkdtemp(dir=self.dir, prefix=".tmp_"))
         try:
@@ -115,6 +147,15 @@ class CheckpointManager:
                 "bucket_bytes": sizes,
                 "has_extra": extra_flat is not None,
             }
+            if descs:
+                # one descriptor when uniform (the common case: m can be
+                # 10k+), the full per-bucket list otherwise
+                if all(d == descs[0] for d in descs):
+                    manifest["bucket_tree"] = descs[0]
+                else:
+                    manifest["bucket_trees"] = descs
+            if extra_desc is not None:
+                manifest["extra_tree"] = extra_desc
             (tmp / "manifest.json").write_text(json.dumps(manifest))
             if final.exists():
                 shutil.rmtree(final)
@@ -144,11 +185,24 @@ class CheckpointManager:
 
     def restore(self, step: int, n_new: int, w: np.ndarray, tau: float,
                 extra_proto: Any = None,
-                alive_nodes: Optional[set] = None
+                alive_nodes: Optional[set] = None,
+                resident_state: Optional[BucketedState] = None
                 ) -> Tuple[BucketedState, Assignment, RestoreReport, Any]:
         """Restore onto ``n_new`` nodes.  ``alive_nodes``: node ids whose
         local buckets survive in memory/disk-cache (their buckets are free
-        to reopen); default: all checkpoint nodes survive."""
+        to reopen); default: all checkpoint nodes survive.
+
+        ``resident_state``: the surviving in-memory BucketedState.  When
+        given, buckets the plan counts as resident are taken from it and
+        their ``bucket_*.npz`` files are never opened — the report's
+        read/resident split then matches the actual I/O exactly (asserted).
+        Without it every bucket is read from storage (a cold restart), and
+        ``files_read == m`` records that.
+
+        Buckets are un-flattened back to the pytree structure recorded at
+        save time (older checkpoints without the descriptor fall back to
+        flat ``{"a/b": arr}`` dicts).
+        """
         man = self.manifest(step)
         m = man["m"]
         old = Assignment(m, tuple(tuple(iv) for iv in man["intervals"]))
@@ -158,18 +212,40 @@ class CheckpointManager:
         n_total = max(old.n_nodes, plan.new.n_nodes)
         owner_new = plan.new.padded(n_total).owner_of()
         alive = set(range(old.n_nodes)) if alive_nodes is None else alive_nodes
+        descs = man.get("bucket_trees") or (
+            [man["bucket_tree"]] * m if "bucket_tree" in man else None)
         buckets = []
         read = resident = 0.0
+        files_read = files_resident = 0
         base = self.dir / f"step_{step}"
         for j in range(m):
-            flat = dict(np.load(base / f"bucket_{j}.npz"))
-            buckets.append(flat)
-            if owner_new[j] == owner_old[j] and owner_old[j] in alive:
+            is_resident = (owner_new[j] == owner_old[j]
+                           and owner_old[j] in alive)
+            if is_resident and resident_state is not None:
+                buckets.append(resident_state.buckets[j])
+                files_resident += 1
+            else:
+                flat = dict(np.load(base / f"bucket_{j}.npz"))
+                buckets.append(_unflatten(flat, _proto(descs[j]))
+                               if descs else flat)
+                files_read += 1
+            if is_resident:
                 resident += s[j]
             else:
                 read += s[j]
+        if resident_state is not None:
+            # accounting must match the files actually opened
+            expected = int(sum(1 for j in range(m)
+                               if not (owner_new[j] == owner_old[j]
+                                       and owner_old[j] in alive)))
+            assert files_read == expected, (files_read, expected)
         extra = None
-        if man["has_extra"] and extra_proto is not None:
-            extra = _unflatten(dict(np.load(base / "extra.npz")), extra_proto)
+        if man["has_extra"]:
+            proto = extra_proto if extra_proto is not None else (
+                _proto(man["extra_tree"]) if "extra_tree" in man else None)
+            if proto is not None:
+                extra = _unflatten(dict(np.load(base / "extra.npz")), proto)
         state = BucketedState(buckets)
-        return state, plan.new, RestoreReport(plan, read, resident), extra
+        return state, plan.new, RestoreReport(
+            plan, read, resident,
+            files_read=files_read, files_resident=files_resident), extra

@@ -91,7 +91,15 @@ class ElasticController:
         placement = self.assign.owner_of()
         report = self.executor.execute(plan, state, placement)
         n_before = self.n_nodes
+        alive_before = {i for i, (lo, hi) in enumerate(self.assign.intervals)
+                        if hi > lo}
         self.assign = plan.new
+        alive_after = {i for i, (lo, hi) in enumerate(self.assign.intervals)
+                       if hi > lo}
+        # the EWMA tracker must follow the topology: survivors (nonempty
+        # before AND after) keep their estimate, new/vacated slots reset
+        self.speeds.resize(len(self.assign.intervals),
+                           keep=sorted(alive_before & alive_after))
         self.history.append(self.n_nodes)
         self.decisions.append(DecisionRecord(
             t=len(self.history) - 2, action=kind, n_before=n_before,

@@ -88,8 +88,28 @@ class SpeedTracker:
 
     def update(self, step_times: Sequence[float]) -> None:
         t = np.asarray(step_times, dtype=np.float64)
+        if t.shape != self.ewma.shape:
+            raise ValueError(
+                f"got {t.shape[0] if t.ndim else 0} step times for "
+                f"{len(self.ewma)} tracked nodes — resize() the tracker "
+                "when the topology changes")
         self.ewma = np.where(self.ewma == 0, t,
                              self.alpha * t + (1 - self.alpha) * self.ewma)
+
+    def resize(self, n_new: int,
+               keep: Optional[Sequence[int]] = None) -> None:
+        """Resize to ``n_new`` node slots after a topology change.
+
+        EWMAs of node ids in ``keep`` (default: every id present both
+        before and after) survive; new or vacated slots reset to 0, which
+        ``speeds``/``stragglers`` treat as "no observation yet"."""
+        new = np.zeros(n_new)
+        ids = range(min(len(self.ewma), n_new)) if keep is None else keep
+        for i in ids:
+            if 0 <= i < n_new and i < len(self.ewma):
+                new[i] = self.ewma[i]
+        self.ewma = new
+        self.n_nodes = n_new
 
     def speeds(self) -> np.ndarray:
         t = np.where(self.ewma <= 0, np.median(self.ewma[self.ewma > 0])
