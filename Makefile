@@ -1,11 +1,14 @@
 # Repo entrypoints.  `make test` is the ROADMAP.md tier-1 command.
-.PHONY: test test-fast bench bench-fig12 fig13 check-bench quickstart
+.PHONY: test test-fast lint bench bench-fig12 fig13 check-bench quickstart
 
 test:
 	scripts/ci.sh
 
 test-fast:
 	scripts/ci.sh fast
+
+lint:
+	scripts/ci.sh lint
 
 bench:
 	PYTHONPATH=src python -m benchmarks.run

@@ -83,7 +83,8 @@ def main(argv=None):
     for mode in MODES:
         sv = VectorizedServingSim(
             m, sim, ElasticPlanner(policy="greedy"), mode=mode, tau=0.6,
-            fluid_batch=BATCH.get(mode, 1), record_latency=True)
+            fluid_batch=BATCH.get(mode, 1), record_latency=True,
+            verify="strict")   # every plan passes the PLN catalog or dies
         mets = sv.run(w, s, trace)
         vals, wts = sv.latency_samples()
         # spike window = migration intervals plus the drain-out interval

@@ -11,8 +11,11 @@ structural change, so a benchmark regression cannot land silently.
 
 Wall-clock timing fields (elapsed/plan-time/first/steady seconds) are
 exempt — they measure the machine, not the code.  Files present only in
-the working tree are reported as new (not a failure: commit them); files
-committed but deleted from the tree fail.
+the working tree are reported as new and PASS with a notice (a
+benchmark-adding PR needs no two-commit dance; commit the JSON to start
+gating it); files committed but deleted from the tree fail.  Only a
+genuinely absent path is treated as "new" — a bad ``--ref`` or a broken
+git invocation is a hard error (exit 2), never a silent pass.
 """
 from __future__ import annotations
 
@@ -37,13 +40,36 @@ def is_timing_key(key: str) -> bool:
     return bool(TIMING_KEY.search(key))
 
 
+class GitError(RuntimeError):
+    """git itself failed (bad ref, not a repository, …) — distinct from a
+    path that simply doesn't exist at the ref."""
+
+
+def resolve_ref(ref: str) -> str:
+    """Fail fast on a ref that names no commit, so a typo'd --ref can't
+    silently turn every baseline into 'new file, pass'."""
+    proc = subprocess.run(
+        ["git", "rev-parse", "--verify", "--quiet", f"{ref}^{{commit}}"],
+        cwd=REPO, capture_output=True, text=True)
+    if proc.returncode != 0:
+        raise GitError(f"--ref {ref!r} does not name a commit"
+                       + (f": {proc.stderr.strip()}" if proc.stderr.strip()
+                          else ""))
+    return proc.stdout.strip()
+
+
 def committed(name: str, ref: str) -> str | None:
-    try:
-        return subprocess.run(
-            ["git", "show", f"{ref}:{name}"], cwd=REPO, check=True,
-            capture_output=True, text=True).stdout
-    except subprocess.CalledProcessError:
+    """Baseline text at ``ref``, or None iff the path doesn't exist there
+    (a new benchmark).  Any other git failure raises GitError."""
+    proc = subprocess.run(
+        ["git", "show", f"{ref}:{name}"], cwd=REPO,
+        capture_output=True, text=True)
+    if proc.returncode == 0:
+        return proc.stdout
+    err = proc.stderr.strip()
+    if "does not exist" in err or "exists on disk, but not in" in err:
         return None
+    raise GitError(f"git show {ref}:{name} failed: {err}")
 
 
 def diff(base, fresh, rtol: float, path: str = "") -> list:
@@ -91,18 +117,27 @@ def main(argv=None) -> int:
     if not names:
         print("check_bench: no BENCH_*.json files found")
         return 1
+    try:
+        resolve_ref(args.ref)
+    except GitError as e:
+        print(f"check_bench: {e}")
+        return 2
     failed = False
     for name in names:
         fresh_path = os.path.join(REPO, name)
-        base_text = committed(name, args.ref)
+        try:
+            base_text = committed(name, args.ref)
+        except GitError as e:
+            print(f"check_bench: {e}")
+            return 2
         if not os.path.exists(fresh_path):
             if base_text is not None:
                 print(f"FAIL {name}: committed baseline but no fresh file")
                 failed = True
             continue
         if base_text is None:
-            print(f"NEW  {name}: no baseline at {args.ref} "
-                  f"(commit it to start gating)")
+            print(f"NEW  {name}: not present at {args.ref} — new "
+                  f"benchmark, passing (commit it to start gating)")
             continue
         with open(fresh_path) as fh:
             fresh = json.load(fh)

@@ -2,7 +2,9 @@
 # Tier-1 CI entrypoint.
 #
 #   scripts/ci.sh          — the ROADMAP.md tier-1 command (full suite)
-#   scripts/ci.sh fast     — fast path: skip @slow jit/model-compile tests
+#   scripts/ci.sh fast     — fast path: lint + skip @slow jit/model tests
+#   scripts/ci.sh lint     — static analysis only (jaxlint + plancheck
+#                            smoke; `make lint`)
 #
 # Runs on a bare jax+numpy+pytest container (the hypothesis property tests
 # fall back to the vendored shim in tests/_vendor); install
@@ -11,6 +13,17 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "lint" || "${1:-}" == "fast" ]]; then
+    # static analysis: jaxlint (JAX001..006) must be clean over src/, and
+    # one SSM plan per strategy must pass the plancheck catalog
+    # (PLN001..006) — see src/repro/analysis/
+    python -m repro.analysis.jaxlint src/repro
+    python scripts/lint_plans.py
+fi
+if [[ "${1:-}" == "lint" ]]; then
+    exit 0
+fi
 
 if [[ "${1:-}" == "fast" ]]; then
     python -m pytest -x -q -m "not slow"

@@ -1,0 +1,131 @@
+#!/usr/bin/env python
+"""Plan linter CLI: run the ``analysis.plancheck`` rule catalog
+(PLN001..PLN006) against real planner output.
+
+Two modes:
+
+* default — plan one seeded scale-up, scale-down, and rebalance with the
+  SSM planner and verify every strategy's schedule/windows for each
+  (the "one plan per strategy" smoke CI runs in ``scripts/ci.sh fast``);
+* ``--scenario NAME`` (or ``--all-scenarios``) — replay the full closed
+  control loop on a scenario from ``runtime.scenarios`` with
+  ``verify="strict"``, so every plan behind every DecisionRecord in the
+  audit log is checked the moment it is made; prints the decision log
+  of the migrations that were verified.
+
+Exit status 0 = every plan clean; 1 = findings (printed per rule).
+
+Examples::
+
+    PYTHONPATH=src python scripts/lint_plans.py
+    PYTHONPATH=src python scripts/lint_plans.py --scenario flash_crowd
+    PYTHONPATH=src python scripts/lint_plans.py --all-scenarios -v
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from repro.analysis import format_findings, verify_migration
+from repro.core import Assignment, ElasticPlanner
+from repro.runtime.serving import SERVING_MODES
+
+BATCH = {"batched_fluid": 8}          # fig12's batch for the batched mode
+
+
+def _even(m: int, n: int) -> Assignment:
+    cuts = np.linspace(0, m, n + 1).round().astype(int)
+    return Assignment.from_boundaries(m, list(cuts))
+
+
+def lint_strategies(m: int = 256, seed: int = 0, tau: float = 0.4,
+                    verbose: bool = False) -> int:
+    """One plan per strategy per scale event, fully verified."""
+    rng = np.random.default_rng(seed)
+    w = rng.pareto(1.5, m) + 0.1
+    s = rng.pareto(1.5, m) * 1e6 + 1e5
+    planner = ElasticPlanner(policy="ssm")
+    events = [("scale_up", 5, 8), ("scale_down", 8, 3),
+              ("rebalance", 6, 6)]
+    bad = 0
+    for label, n0, n1 in events:
+        assign = _even(m, n0)
+        plan = planner.plan(assign, n1, w, s, tau=tau)
+        for mode in SERVING_MODES:
+            findings = verify_migration(
+                plan, s, mode=mode, fluid_batch=BATCH.get(mode, 1),
+                w=w, tau=tau, n_target=n1,
+                relax_tau_max=planner.relax_tau_max, expected_old=assign)
+            status = "ok" if not findings else "FAIL"
+            if findings or verbose:
+                print(f"{label:>10} {n0}->{n1} {mode:<14} {status}")
+            for f in findings:
+                print(f"    {f}")
+            bad += len(findings)
+    moved = "clean" if not bad else f"{bad} finding(s)"
+    print(f"lint_plans: strategies x events = "
+          f"{len(SERVING_MODES) * len(events)} plans verified — {moved}")
+    return 1 if bad else 0
+
+
+def lint_scenario(name: str, mode: str = "live",
+                  verbose: bool = False) -> int:
+    """Replay the closed loop with verify='strict': every DecisionRecord's
+    plan passes the full catalog or the run aborts with the findings."""
+    from repro.analysis import PlanVerificationError
+    from repro.runtime import scenarios
+    from repro.runtime.control import ControlLoop
+    from repro.runtime.serving import ElasticServingSim, SimConfig
+
+    scen = scenarios.make(name)
+    planner = ElasticPlanner(policy="ssm")
+    sim = ElasticServingSim(scen.m, SimConfig(), planner, mode=mode,
+                            verify="strict")
+    try:
+        report = ControlLoop(sim).run(scen)
+    except PlanVerificationError as e:
+        print(f"lint_plans[{name}]: FAIL\n{e}")
+        return 1
+    migrated = [d for d in report.decisions if d.migrated]
+    print(f"lint_plans[{name}]: {len(report.decisions)} decisions, "
+          f"{len(migrated)} migrations — every plan clean")
+    if verbose:
+        for d in migrated:
+            print(f"  t={d.t:>3} {d.action:<10} n {d.n_before}->"
+                  f"{d.n_after} strategy={d.strategy or mode} "
+                  f"bytes={d.cost_bytes:.3g} ({d.reason})")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scenario", help="replay one scenario from "
+                                       "runtime.scenarios under "
+                                       "verify='strict'")
+    ap.add_argument("--all-scenarios", action="store_true",
+                    help="replay every scenario in the catalog")
+    ap.add_argument("--mode", default="live",
+                    help="strategy for scenario replay (default live)")
+    ap.add_argument("--m", type=int, default=256,
+                    help="buckets for the strategy smoke (default 256)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+    if args.all_scenarios:
+        from repro.runtime import scenarios
+        rc = 0
+        for name in scenarios.SCENARIOS:
+            rc |= lint_scenario(name, mode=args.mode,
+                                verbose=args.verbose)
+        return rc
+    if args.scenario:
+        return lint_scenario(args.scenario, mode=args.mode,
+                             verbose=args.verbose)
+    return lint_strategies(m=args.m, seed=args.seed,
+                           verbose=args.verbose)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,40 @@
+"""Static analysis over migration plans and the codebase itself.
+
+Two checkers, both producing named machine-readable rules:
+
+* ``plancheck`` — PLN001..PLN006: the invariant catalog a correct
+  migration must satisfy (move coverage, matching rounds, byte
+  conservation, capacity feasibility, window containment, permutation
+  validity), runnable against any MigrationPlan + schedule *before*
+  execution.  Wired as the opt-in ``verify="strict"`` debug hook of
+  ``MigrationExecutor`` / the serving simulators / ``ControlLoop``, as
+  the ``scripts/lint_plans.py`` CLI, and as the shared oracle the
+  property tests call.
+* ``jaxlint`` — JAX001..JAX006: an AST lint over the source tree with
+  rules distilled from this repo's actual bug history (uint64/Python-int
+  promotion, tracer leaks inside jit, numpy in scanned closures,
+  unscoped x64 mutation, nondeterminism in planners, mutable defaults).
+
+Rule IDs are stable: tests, CI, and suppression comments refer to them.
+"""
+_PLANCHECK = (
+    "PLN_RULES", "Finding", "PlanVerificationError", "assert_clean",
+    "check_moves", "check_permutation", "check_plan", "check_schedule",
+    "check_windows", "format_findings", "verify_migration",
+)
+_JAXLINT = ("JAX_RULES", "LintFinding", "lint_file", "lint_paths")
+
+__all__ = list(_PLANCHECK + _JAXLINT)
+
+
+def __getattr__(name):
+    # lazy (PEP 562): `python -m repro.analysis.jaxlint` must not import
+    # the submodule twice (runpy warning), and importing the package must
+    # not pull the runtime layer until a checker is actually used
+    if name in _PLANCHECK:
+        from . import plancheck
+        return getattr(plancheck, name)
+    if name in _JAXLINT:
+        from . import jaxlint
+        return getattr(jaxlint, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

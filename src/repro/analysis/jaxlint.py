@@ -1,0 +1,444 @@
+"""AST lint for the JAX footguns this repo has actually been bitten by.
+
+Every rule is distilled from a real bug class in this codebase's history
+(see docs/ARCHITECTURE.md "Invariants" and the PR log in CHANGES.md):
+
+``JAX001`` **mixed uint64/Python-int arithmetic** — the PR 1 ``route()``
+    overflow class: numpy silently promotes ``np.uint64 <op> python-int``
+    to float64, corrupting hash arithmetic.  Flags a bare int literal
+    ≥ 2³² used directly as a binary-op operand (unless the expression is
+    wrapped in ``uint64(...)``), and any binary op mixing a
+    ``uint64(...)`` call with a bare int literal.
+``JAX002`` **tracer concretization** — ``.item()`` / ``float()`` /
+    ``int()`` / ``bool()`` on a traced value inside a jit/``lax.scan``
+    body raises ``ConcretizationTypeError`` only at trace time, on the
+    shapes that reach it.
+``JAX003`` **numpy inside traced code** — ``np.*`` calls in a
+    jitted/scanned closure are silently constant-folded at trace time:
+    correct-looking, wrong under new inputs.
+``JAX004`` **unscoped x64 mutation** — ``config.update("jax_enable_x64",
+    …)`` outside a guarded scope flips global precision for every module
+    imported after it (the ``ssm_jit`` discipline).
+``JAX005`` **nondeterminism in planner/scheduler modules** — wall clocks
+    (``time.time``/``perf_counter``) and unseeded ``random`` /
+    ``np.random`` calls in planning code break the differential tests'
+    exact reproducibility.  Only applies to ``core/*`` and the runtime
+    planner/scheduler modules.
+``JAX006`` **mutable default arguments** — ``def f(x, acc=[])`` and
+    dataclass fields ``x: list = []`` share one object across calls /
+    instances; registries accrete state.  Use ``field(default_factory=…)``
+    or ``None``.
+
+Suppress a deliberate hit with a trailing (or immediately preceding)
+comment naming the rule and the reason::
+
+    t0 = time.perf_counter()   # jaxlint: disable=JAX005 — wall-clock measured backend
+
+Report-only by design: no ``--fix``.  CLI::
+
+    python -m repro.analysis.jaxlint src/repro    # exit 1 on findings
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Union
+
+JAX_RULES = {
+    "JAX001": "mixed uint64/Python-int arithmetic (silent float64 "
+              "promotion — the route() overflow class)",
+    "JAX002": ".item()/float()/int()/bool() on a tracer inside a "
+              "jit/scan body",
+    "JAX003": "np.* call inside a jitted/scanned closure (constant-"
+              "folded at trace time)",
+    "JAX004": "unscoped jax_enable_x64 mutation",
+    "JAX005": "nondeterminism (wall clock / unseeded random) in a "
+              "planner/scheduler module",
+    "JAX006": "mutable default argument (def f(x=[]) or dataclass "
+              "field x: list = [])",
+}
+
+_SUPPRESS_RE = re.compile(r"#\s*jaxlint:\s*disable=([A-Z0-9,\s]+)")
+
+# JAX005 only bites where determinism is load-bearing: the planning DP
+# and the runtime scheduler/control modules the differential tests pin.
+_JAX005_PATHS = re.compile(
+    r"(^|/)(core/[^/]+\.py"
+    r"|runtime/(migration|control|serving|simulator|scenarios|ft"
+    r"|elastic|checkpoint)\.py)$")
+
+_BIG_INT = 1 << 32
+
+_TRACING_ARGS = {          # callee name -> positions holding traced fns
+    "scan": (0,), "fori_loop": (2,), "while_loop": (0, 1),
+    "cond": (1, 2), "jit": (0,), "pjit": (0,), "remat": (0,),
+    "checkpoint": (0,),
+}
+
+_FuncNode = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+
+
+@dataclass(frozen=True)
+class LintFinding:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+def _attr_chain(node: ast.AST) -> Optional[List[str]]:
+    """x.y.z -> ["x", "y", "z"]; None if the root isn't a plain Name."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return None
+
+
+class _Aliases:
+    """What local names the footgun modules/functions are bound to."""
+
+    def __init__(self, tree: ast.AST):
+        self.numpy: Set[str] = set()
+        self.jnp: Set[str] = set()
+        self.time_mod: Set[str] = set()
+        self.random_mod: Set[str] = set()
+        self.datetime_mod: Set[str] = set()
+        self.uint64_names: Set[str] = set()      # from numpy import uint64
+        self.time_funcs: Set[str] = set()        # from time import time, …
+        self.random_funcs: Set[str] = set()
+        self.jit_names: Set[str] = {"jit", "pjit"}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    name = a.asname or a.name.split(".")[0]
+                    if a.name == "numpy":
+                        self.numpy.add(name)
+                    elif a.name == "jax.numpy":
+                        self.jnp.add(a.asname or "jax")
+                    elif a.name == "time":
+                        self.time_mod.add(name)
+                    elif a.name == "random":
+                        self.random_mod.add(name)
+                    elif a.name == "datetime":
+                        self.datetime_mod.add(name)
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                for a in node.names:
+                    name = a.asname or a.name
+                    if mod == "numpy" and a.name == "uint64":
+                        self.uint64_names.add(name)
+                    elif mod == "time" and a.name in ("time",
+                                                      "perf_counter",
+                                                      "monotonic"):
+                        self.time_funcs.add(name)
+                    elif mod == "random":
+                        self.random_funcs.add(name)
+                    elif mod in ("jax", "jax.experimental.pjit") \
+                            and a.name in ("jit", "pjit"):
+                        self.jit_names.add(name)
+
+    def is_uint64_call(self, node: ast.AST) -> bool:
+        if not isinstance(node, ast.Call):
+            return False
+        chain = _attr_chain(node.func)
+        if not chain:
+            return False
+        if len(chain) == 1:
+            return chain[0] in self.uint64_names
+        return chain[-1] == "uint64" and \
+            chain[0] in (self.numpy | self.jnp)
+
+    def is_jitish(self, node: ast.AST) -> bool:
+        """Is this expression a jit transform (possibly partial-applied)?"""
+        chain = _attr_chain(node)
+        if chain and chain[-1] in self.jit_names:
+            return True
+        if isinstance(node, ast.Call):          # jit(...)(f), partial(jit…)
+            if self.is_jitish(node.func):
+                return True
+            fchain = _attr_chain(node.func)
+            if fchain and fchain[-1] == "partial" and node.args:
+                return self.is_jitish(node.args[0])
+        return False
+
+
+def _collect_traced_roots(tree: ast.AST, al: _Aliases) -> Set[ast.AST]:
+    """Functions whose bodies execute under jax tracing: jit-decorated
+    defs, defs/lambdas passed to lax.scan / fori_loop / while_loop /
+    cond / jit, and anything assigned through jit(f)."""
+    roots: Set[ast.AST] = set()
+    traced_names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(al.is_jitish(d) for d in node.decorator_list):
+                roots.add(node)
+        elif isinstance(node, ast.Call):
+            chain = _attr_chain(node.func)
+            positions = ()
+            if chain and chain[-1] in _TRACING_ARGS:
+                positions = _TRACING_ARGS[chain[-1]]
+            elif al.is_jitish(node.func):
+                positions = (0,)
+            for p in positions:
+                if p < len(node.args):
+                    arg = node.args[p]
+                    if isinstance(arg, ast.Lambda):
+                        roots.add(arg)
+                    elif isinstance(arg, ast.Name):
+                        traced_names.add(arg.id)
+    if traced_names:
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name in traced_names:
+                roots.add(node)
+    return roots
+
+
+class _Walker:
+    def __init__(self, path: str, tree: ast.Module, apply_jax005: bool):
+        self.path = path
+        self.al = _Aliases(tree)
+        self.traced_roots = _collect_traced_roots(tree, self.al)
+        self.apply_jax005 = apply_jax005
+        self.findings: List[LintFinding] = []
+        self.parent: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(tree):
+            for child in ast.iter_child_nodes(node):
+                self.parent[child] = node
+        self.tree = tree
+
+    def emit(self, node: ast.AST, rule: str, msg: str) -> None:
+        self.findings.append(
+            LintFinding(self.path, getattr(node, "lineno", 0), rule, msg))
+
+    def _in_traced_scope(self, node: ast.AST) -> bool:
+        cur = node
+        while cur in self.parent:
+            cur = self.parent[cur]
+            if cur in self.traced_roots:
+                return True
+        return False
+
+    def _inside_uint64_wrap(self, node: ast.AST) -> bool:
+        cur = node
+        while cur in self.parent:
+            cur = self.parent[cur]
+            if self.al.is_uint64_call(cur):
+                return True
+            if isinstance(cur, (ast.stmt, ast.Lambda)):
+                break
+        return False
+
+    # -- rules --------------------------------------------------------------
+    def _jax001(self, node: ast.BinOp) -> None:
+        def big_int(n: ast.AST) -> bool:
+            return isinstance(n, ast.Constant) and isinstance(n.value, int) \
+                and not isinstance(n.value, bool) and abs(n.value) >= _BIG_INT
+
+        def bare_int(n: ast.AST) -> bool:
+            return isinstance(n, ast.Constant) and isinstance(n.value, int) \
+                and not isinstance(n.value, bool)
+
+        sides = (node.left, node.right)
+        if any(big_int(s) for s in sides) \
+                and not self._inside_uint64_wrap(node):
+            self.emit(node, "JAX001",
+                      "int literal ≥ 2^32 in arithmetic outside a "
+                      "uint64(...) wrap — numpy promotes the mix to "
+                      "float64 and corrupts the low bits")
+        elif any(self.al.is_uint64_call(s) for s in sides) \
+                and any(bare_int(s) for s in sides):
+            self.emit(node, "JAX001",
+                      "uint64(...) mixed with a bare Python int in one "
+                      "binary op — wrap both operands")
+
+    def _jax002_003(self, node: ast.Call) -> None:
+        if not self._in_traced_scope(node):
+            return
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "item":
+            self.emit(node, "JAX002",
+                      ".item() inside a traced body concretizes the "
+                      "tracer (ConcretizationTypeError at trace time)")
+            return
+        if isinstance(node.func, ast.Name) \
+                and node.func.id in ("float", "int", "bool") \
+                and node.args \
+                and not all(isinstance(a, ast.Constant)
+                            for a in node.args):
+            self.emit(node, "JAX002",
+                      f"{node.func.id}() on a traced value inside a "
+                      f"jit/scan body")
+            return
+        chain = _attr_chain(node.func)
+        if chain and len(chain) >= 2 and chain[0] in self.al.numpy:
+            self.emit(node, "JAX003",
+                      f"{'.'.join(chain)}(...) inside a traced body is "
+                      f"constant-folded at trace time — use jnp")
+
+    def _jax004(self, node: ast.Call) -> None:
+        chain = _attr_chain(node.func)
+        if not chain or chain[-1] != "update" or "config" not in chain:
+            return
+        if node.args and isinstance(node.args[0], ast.Constant) \
+                and node.args[0].value == "jax_enable_x64":
+            self.emit(node, "JAX004",
+                      'config.update("jax_enable_x64", ...) mutates '
+                      "global precision for everything imported after "
+                      "it — scope it or set it once at entry")
+
+    def _jax005(self, node: ast.Call) -> None:
+        if not self.apply_jax005:
+            return
+        chain = _attr_chain(node.func)
+        if chain is None:
+            return
+        al = self.al
+        if len(chain) == 2 and chain[0] in al.time_mod \
+                and chain[1] in ("time", "perf_counter", "monotonic"):
+            self.emit(node, "JAX005",
+                      f"{'.'.join(chain)}() wall clock in a planner/"
+                      f"scheduler module breaks reproducibility")
+        elif len(chain) == 1 and chain[0] in (al.time_funcs
+                                              | al.random_funcs):
+            self.emit(node, "JAX005",
+                      f"{chain[0]}() (wall clock / unseeded random) in "
+                      f"a planner/scheduler module")
+        elif len(chain) >= 2 and chain[0] in al.random_mod:
+            self.emit(node, "JAX005",
+                      f"{'.'.join(chain)}() unseeded stdlib random in a "
+                      f"planner/scheduler module")
+        elif len(chain) >= 3 and chain[0] in al.numpy \
+                and chain[1] == "random":
+            if chain[2] == "default_rng" and node.args:
+                return                     # seeded generator: fine
+            self.emit(node, "JAX005",
+                      f"{'.'.join(chain)}() global/unseeded np.random "
+                      f"in a planner/scheduler module — use "
+                      f"default_rng(seed)")
+        elif len(chain) >= 2 and chain[0] in al.datetime_mod \
+                and chain[-1] in ("now", "utcnow", "today"):
+            self.emit(node, "JAX005",
+                      f"{'.'.join(chain)}() wall clock in a planner/"
+                      f"scheduler module")
+
+    def _jax006_def(self, node: _FuncNode) -> None:
+        for d in list(node.args.defaults) + \
+                [k for k in node.args.kw_defaults if k is not None]:
+            if self._mutable_literal(d):
+                name = getattr(node, "name", "<lambda>")
+                self.emit(d, "JAX006",
+                          f"mutable default argument in {name}() — one "
+                          f"shared object across all calls; use None or "
+                          f"field(default_factory=...)")
+
+    def _jax006_class(self, node: ast.ClassDef) -> None:
+        for stmt in node.body:
+            val = None
+            if isinstance(stmt, ast.AnnAssign):
+                val = stmt.value
+            elif isinstance(stmt, ast.Assign):
+                val = stmt.value
+            if val is not None and self._mutable_literal(val):
+                self.emit(val, "JAX006",
+                          f"mutable class-level default in {node.name} — "
+                          f"shared across instances; use "
+                          f"field(default_factory=...)")
+
+    @staticmethod
+    def _mutable_literal(node: ast.AST) -> bool:
+        if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+            return True
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id in ("list", "dict", "set") \
+                and not node.args and not node.keywords:
+            return True
+        return False
+
+    def run(self) -> List[LintFinding]:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.BinOp):
+                self._jax001(node)
+            elif isinstance(node, ast.Call):
+                self._jax002_003(node)
+                self._jax004(node)
+                self._jax005(node)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.Lambda)):
+                self._jax006_def(node)
+            elif isinstance(node, ast.ClassDef):
+                self._jax006_class(node)
+        return self.findings
+
+
+def _suppressed_rules(lines: Sequence[str], lineno: int) -> Set[str]:
+    """Rules disabled for 1-indexed ``lineno`` — by a trailing comment on
+    the line itself or a standalone comment on the line above."""
+    out: Set[str] = set()
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(lines):
+            text = lines[ln - 1]
+            if ln != lineno and not text.lstrip().startswith("#"):
+                continue               # line above counts only standalone
+            m = _SUPPRESS_RE.search(text)
+            if m:
+                out |= {r.strip() for r in m.group(1).split(",")
+                        if r.strip()}
+    return out
+
+
+def lint_file(path, text: Optional[str] = None) -> List[LintFinding]:
+    """Lint one file; returns unsuppressed findings."""
+    p = str(path)
+    if text is None:
+        text = Path(p).read_text()
+    try:
+        tree = ast.parse(text, filename=p)
+    except SyntaxError as e:
+        return [LintFinding(p, e.lineno or 0, "JAX000",
+                            f"syntax error: {e.msg}")]
+    posix = Path(p).as_posix()
+    walker = _Walker(p, tree, apply_jax005=bool(_JAX005_PATHS.search(posix)))
+    findings = walker.run()
+    lines = text.splitlines()
+    return [f for f in findings
+            if f.rule not in _suppressed_rules(lines, f.line)]
+
+
+def lint_paths(paths: Iterable) -> List[LintFinding]:
+    """Lint files and directories (recursively, ``*.py``)."""
+    out: List[LintFinding] = []
+    for p in paths:
+        p = Path(p)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            out.extend(lint_file(f))
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv:
+        argv = ["src/repro"]
+    findings = lint_paths(argv)
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"jaxlint: {len(findings)} finding(s) in {len(argv)} "
+              f"path(s)", file=sys.stderr)
+        return 1
+    print(f"jaxlint: clean ({', '.join(map(str, argv))})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,490 @@
+"""Plan/schedule verifier: the migration invariant catalog as named rules.
+
+The paper's claim is that a migration plan is *correct by construction* —
+coverage, balance, and conservation hold because the DP enforces them.
+Every one of those guarantees is a property that can be checked against a
+concrete ``MigrationPlan`` + schedule *before* anything executes, which is
+exactly where migration bugs must be caught: they surface as silent state
+loss or latency spikes, not crashes (Megaphone; Volnes et al.).
+
+Rules (stable IDs — tests, CI, and docs refer to them):
+
+``PLN001`` **move coverage & ownership** — the scheduled moves are exactly
+    the plan's owner diff: every moving bucket shipped once, none dropped,
+    none invented, no bucket owned twice; old/new assignments are valid
+    contiguous covers of ``[0, m)`` and ``plan.old`` matches the live
+    assignment when one is given.
+``PLN002`` **round validity** — every batched_fluid round is a matching
+    (≤1 send and ≤1 receive per node) and maximal: no schedulable link
+    left idle while both endpoints were free.
+``PLN003`` **byte conservation** — move sizes equal the priced bucket
+    bytes (``DeviceBucketedState`` leaf pricing or the planner's ``s``),
+    their sum equals ``plan.cost``, and ``gain + cost`` equals the total
+    state (Definitions 2.2/3.1: nothing lost, nothing double-counted).
+``PLN004`` **capacity feasibility** — every node's post-migration load is
+    within the balance cap ``(1+τ)·W/n`` (Definition 2.1) at the τ the
+    plan was made for (or the planner's relax ceiling when auto-relax is
+    enabled).
+``PLN005`` **window containment & own-transfer pauses** — pause windows
+    lie inside ``[0, duration]``; non-moving buckets never pause;
+    fluid/batched_fluid buckets pause exactly their own transfer;
+    live/progressive windows open at 0 (paper §5.2 semantics).
+``PLN006`` **permutation validity** — ``plan_to_permutation`` yields a
+    true permutation of ``[0, m)`` that lays each new node's buckets out
+    contiguously (the uniform-bucket dry-run/GSPMD layout).
+
+Entry points: the fine-grained ``check_*`` functions return
+``Finding`` lists; ``verify_migration`` composes the full catalog for one
+plan the way the runtime would execute it (shared ``strategy_schedule`` /
+``strategy_windows`` dispatch, so the verifier checks exactly the
+schedule the runtime runs).  ``MigrationExecutor(verify="strict")`` and
+the serving simulators / ``ControlLoop`` call these as an opt-in debug
+hook; ``scripts/lint_plans.py`` is the CLI; the property tests in
+``tests/`` call them as the shared oracle.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import MigrationPlan, balance_cap, feasible_tol
+from repro.runtime.migration import (
+    move_list, plan_to_permutation, strategy_schedule,
+)
+
+PLN_RULES = {
+    "PLN001": "move coverage & ownership: schedule is exactly the plan's "
+              "owner diff; assignments are valid contiguous covers",
+    "PLN002": "round validity: each batched_fluid round is a maximal "
+              "matching (≤1 send, ≤1 recv per node)",
+    "PLN003": "byte conservation: move bytes = priced bucket bytes; "
+              "Σ moves = plan.cost; gain + cost = total state",
+    "PLN004": "capacity feasibility: every new node load ≤ (1+τ)W/n "
+              "(Definition 2.1)",
+    "PLN005": "window containment & own-transfer pauses",
+    "PLN006": "plan_to_permutation is a valid contiguous-layout "
+              "permutation",
+}
+
+# byte quantities are sums of float64 leaf sizes; exact equality modulo
+# accumulation order
+_RTOL = 1e-9
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One violated rule, machine-readable."""
+
+    rule: str                      # "PLN004"
+    message: str
+    context: dict = field(default_factory=dict)
+
+    def __str__(self) -> str:
+        return f"{self.rule}: {self.message}"
+
+
+class PlanVerificationError(AssertionError):
+    """A plan/schedule violated the invariant catalog (verify='strict')."""
+
+    def __init__(self, findings: Sequence[Finding], where: str = ""):
+        self.findings = list(findings)
+        head = f"{where}: " if where else ""
+        super().__init__(head + format_findings(self.findings))
+
+
+def format_findings(findings: Sequence[Finding]) -> str:
+    if not findings:
+        return "clean"
+    return f"{len(findings)} finding(s)\n" + "\n".join(
+        f"  {f}" for f in findings)
+
+
+def assert_clean(findings: Sequence[Finding], where: str = "") -> None:
+    if findings:
+        raise PlanVerificationError(findings, where=where)
+
+
+def handle(findings: Sequence[Finding], verify: Optional[str],
+           where: str = "") -> None:
+    """Dispatch findings per the verify level: 'strict' raises, 'warn'
+    prints to stderr, None/empty ignores."""
+    if not findings or not verify:
+        return
+    if verify == "strict":
+        raise PlanVerificationError(findings, where=where)
+    import sys
+    print(f"plancheck[{where}]: {format_findings(findings)}",
+          file=sys.stderr)
+
+
+def _close(a: float, b: float, scale: float = 0.0) -> bool:
+    # `scale` widens the tolerance to O(ulp · total-state): gain/cost are
+    # differences of large sums, so even an honest zero-move plan carries
+    # a rounding residual proportional to Σs, not to the tiny value itself
+    return abs(a - b) <= _RTOL * max(abs(a), abs(b), scale, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# PLN001 (structure) + PLN003 (conservation) + PLN004 (feasibility)
+# ---------------------------------------------------------------------------
+
+def check_plan(plan: MigrationPlan, s: np.ndarray, *,
+               w: Optional[np.ndarray] = None,
+               tau: Optional[float] = None,
+               n_target: Optional[int] = None,
+               relax_tau_max: Optional[float] = None,
+               expected_old=None) -> List[Finding]:
+    """Structural + conservation + feasibility rules on the plan itself.
+
+    ``w``/``tau`` enable PLN004 (skipped otherwise — the executor hook has
+    no workload view).  ``n_target`` is the node count the cap divides by
+    (defaults to the plan's active node count); ``relax_tau_max`` loosens
+    the cap to the planner's auto-relax ceiling so plans that legitimately
+    relaxed τ are not flagged.  ``expected_old`` pins ``plan.old`` to the
+    live assignment (catches stale-plan bugs)."""
+    out: List[Finding] = []
+    s_arr = np.asarray(s, dtype=np.float64)
+    if plan.old.m != plan.new.m:
+        out.append(Finding("PLN001", f"old m={plan.old.m} != new "
+                                     f"m={plan.new.m}",
+                           {"old_m": plan.old.m, "new_m": plan.new.m}))
+        return out
+    structural = False
+    for name, a in (("old", plan.old), ("new", plan.new)):
+        try:
+            a.validate()
+        except ValueError as e:
+            structural = True
+            out.append(Finding(
+                "PLN001", f"{name} assignment is not a contiguous cover "
+                          f"of [0, {a.m}): {e}",
+                {"assignment": name, "error": str(e)}))
+    if expected_old is not None and \
+            tuple(expected_old.intervals) != tuple(plan.old.intervals):
+        out.append(Finding(
+            "PLN001", "plan.old does not match the live assignment "
+                      "(stale plan)",
+            {"live": list(expected_old.intervals),
+             "plan_old": list(plan.old.intervals)}))
+    if structural:
+        return out          # owner maps below would be garbage
+    # PLN003: gain/cost recomputed from s must match the plan's claims,
+    # and together account for every byte exactly once
+    from repro.core import migration_cost, migration_gain
+    gain = migration_gain(plan.old, plan.new, s_arr)
+    cost = migration_cost(plan.old, plan.new, s_arr)
+    total = float(s_arr.sum())
+    for name, claimed, actual in (("cost", plan.cost, cost),
+                                  ("gain", plan.gain, gain)):
+        if not _close(claimed, actual, scale=total):
+            out.append(Finding(
+                "PLN003", f"plan.{name}={claimed:.6g} but recomputed "
+                          f"{name} from s is {actual:.6g}",
+                {"field": name, "claimed": claimed, "actual": actual}))
+    if not _close(gain + cost, total):
+        out.append(Finding(
+            "PLN003", f"gain {gain:.6g} + cost {cost:.6g} != total state "
+                      f"{total:.6g} (bytes lost or double-counted)",
+            {"gain": gain, "cost": cost, "total": total}))
+    # PLN004: Definition 2.1 at the plan's τ
+    if w is not None and tau is not None:
+        w_arr = np.asarray(w, dtype=np.float64)
+        loads = [(i, float(w_arr[lo:hi].sum()))
+                 for i, (lo, hi) in enumerate(plan.new.intervals)
+                 if hi > lo]
+        n = int(n_target) if n_target is not None else len(loads)
+        tau_eff = float(tau) if relax_tau_max is None \
+            else max(float(tau), float(relax_tau_max))
+        cap = balance_cap(float(w_arr.sum()), max(n, 1), tau_eff)
+        tol = feasible_tol(cap)
+        for i, load in loads:
+            if load > tol:
+                out.append(Finding(
+                    "PLN004", f"node {i} load {load:.6g} exceeds cap "
+                              f"(1+{tau_eff:g})W/{n} = {cap:.6g}",
+                    {"node": i, "load": load, "cap": cap, "tau": tau_eff,
+                     "n": n}))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PLN001 (coverage of a move list) + PLN003 (move pricing)
+# ---------------------------------------------------------------------------
+
+def _key(mv) -> Tuple[int, int, int]:
+    return (int(mv.bucket), int(mv.src), int(mv.dst))
+
+
+def check_moves(plan: MigrationPlan, s: np.ndarray,
+                moves: Sequence) -> List[Finding]:
+    """The move list is exactly the plan's owner diff, priced from ``s``."""
+    out: List[Finding] = []
+    s_arr = np.asarray(s, dtype=np.float64)
+    derived = move_list(plan, s_arr)
+    want = {_key(mv) for mv in derived}
+    got: Dict[Tuple[int, int, int], int] = {}
+    for mv in moves:
+        got[_key(mv)] = got.get(_key(mv), 0) + 1
+    by_bucket: Dict[int, int] = {}
+    for (b, _s, _d), k in got.items():
+        by_bucket[b] = by_bucket.get(b, 0) + k
+    for b, k in sorted(by_bucket.items()):
+        if k > 1:
+            out.append(Finding(
+                "PLN001", f"bucket {b} scheduled to move {k} times "
+                          f"(duplicate ownership transfer)",
+                {"bucket": b, "times": k}))
+    for key in sorted(want - set(got)):
+        out.append(Finding(
+            "PLN001", f"move {key} (bucket, src, dst) required by the "
+                      f"plan but missing from the schedule (dropped — "
+                      f"silent state loss)",
+            {"move": key}))
+    for key in sorted(set(got) - want):
+        out.append(Finding(
+            "PLN001", f"move {key} scheduled but not in the plan's owner "
+                      f"diff (invented move)", {"move": key}))
+    total = 0.0
+    for mv in moves:
+        total += float(mv.nbytes)
+        if _key(mv) in want and not _close(float(mv.nbytes),
+                                           float(s_arr[mv.bucket])):
+            out.append(Finding(
+                "PLN003", f"bucket {mv.bucket} priced {mv.nbytes:.6g} B "
+                          f"but its state is {float(s_arr[mv.bucket]):.6g}"
+                          f" B", {"bucket": int(mv.bucket),
+                                  "nbytes": float(mv.nbytes),
+                                  "state": float(s_arr[mv.bucket])}))
+    if set(got) == want and not any(f.rule == "PLN001" for f in out) \
+            and not _close(total, plan.cost, scale=float(s_arr.sum())):
+        out.append(Finding(
+            "PLN003", f"Σ scheduled bytes {total:.6g} != plan.cost "
+                      f"{plan.cost:.6g}",
+            {"scheduled": total, "plan_cost": float(plan.cost)}))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PLN001 (schedule coverage) + PLN002 (matching rounds)
+# ---------------------------------------------------------------------------
+
+def check_schedule(moves: Sequence, schedule: Sequence[Sequence],
+                   mode: str) -> List[Finding]:
+    """The phase/round structure ships exactly ``moves``; batched_fluid
+    rounds are additionally maximal matchings (PLN002)."""
+    out: List[Finding] = []
+    flat = [mv for group in schedule for mv in group]
+    want: Dict[Tuple[int, int, int], int] = {}
+    for mv in moves:
+        want[_key(mv)] = want.get(_key(mv), 0) + 1
+    got: Dict[Tuple[int, int, int], int] = {}
+    for mv in flat:
+        got[_key(mv)] = got.get(_key(mv), 0) + 1
+    for key in sorted(want):
+        if got.get(key, 0) < want[key]:
+            out.append(Finding(
+                "PLN001", f"move {key} dropped by the {mode} schedule "
+                          f"(state would silently never arrive)",
+                {"move": key, "mode": mode}))
+    for key in sorted(got):
+        extra = got[key] - want.get(key, 0)
+        if extra > 0:
+            kind = "duplicated" if key in want else "invented"
+            out.append(Finding(
+                "PLN001", f"move {key} {kind} by the {mode} schedule",
+                {"move": key, "mode": mode, "times": got[key]}))
+    if mode != "batched_fluid":
+        return out
+    # PLN002: replay the rounds against the pending-link counts
+    pending: Dict[Tuple[int, int], int] = {}
+    for mv in moves:
+        pending[(int(mv.src), int(mv.dst))] = \
+            pending.get((int(mv.src), int(mv.dst)), 0) + 1
+    for r, rnd in enumerate(schedule):
+        if not len(rnd):
+            out.append(Finding("PLN002", f"round {r} is empty",
+                               {"round": r}))
+            continue
+        src_to_dst: Dict[int, int] = {}
+        dst_to_src: Dict[int, int] = {}
+        for mv in rnd:
+            s_, d_ = int(mv.src), int(mv.dst)
+            if src_to_dst.setdefault(s_, d_) != d_:
+                out.append(Finding(
+                    "PLN002", f"round {r}: node {s_} sends to both "
+                              f"{src_to_dst[s_]} and {d_}",
+                    {"round": r, "node": s_}))
+            if dst_to_src.setdefault(d_, s_) != s_:
+                out.append(Finding(
+                    "PLN002", f"round {r}: node {d_} receives from both "
+                              f"{dst_to_src[d_]} and {s_}",
+                    {"round": r, "node": d_}))
+        for (s_, d_), k in sorted(pending.items()):
+            if k > 0 and s_ not in src_to_dst and d_ not in dst_to_src:
+                out.append(Finding(
+                    "PLN002", f"round {r} not maximal: link ({s_}, {d_}) "
+                              f"had pending moves and both endpoints idle",
+                    {"round": r, "link": (s_, d_), "pending": k}))
+        for mv in rnd:
+            lk = (int(mv.src), int(mv.dst))
+            pending[lk] = pending.get(lk, 0) - 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PLN005 (windows)
+# ---------------------------------------------------------------------------
+
+def check_windows(moves: Sequence, un_from: np.ndarray,
+                  un_until: np.ndarray, duration: float, freeze: float,
+                  mode: str, bw_bytes_per_s: float, m: int
+                  ) -> List[Finding]:
+    """Pause windows are contained, own-transfer-sized where the strategy
+    guarantees it, and touch only moving buckets."""
+    out: List[Finding] = []
+    un_from = np.asarray(un_from, dtype=np.float64)
+    un_until = np.asarray(un_until, dtype=np.float64)
+    eps = 1e-9 * max(1.0, abs(duration))
+    moving = {int(mv.bucket): float(mv.nbytes) for mv in moves}
+    width = un_until - un_from
+    for j in range(m):
+        if un_from[j] < -eps or un_from[j] > un_until[j] + eps:
+            out.append(Finding(
+                "PLN005", f"bucket {j} window [{un_from[j]:.6g}, "
+                          f"{un_until[j]:.6g}) is malformed",
+                {"bucket": j, "from": float(un_from[j]),
+                 "until": float(un_until[j])}))
+        elif un_until[j] > duration + eps:
+            out.append(Finding(
+                "PLN005", f"bucket {j} window ends at {un_until[j]:.6g}s, "
+                          f"outside the migration interval "
+                          f"[0, {duration:.6g}]",
+                {"bucket": j, "until": float(un_until[j]),
+                 "duration": float(duration)}))
+        if j not in moving and width[j] > eps:
+            out.append(Finding(
+                "PLN005", f"bucket {j} does not move but is paused for "
+                          f"{width[j]:.6g}s",
+                {"bucket": j, "width": float(width[j])}))
+    if mode == "kill_restart":
+        if moves and freeze <= 0.0:
+            out.append(Finding(
+                "PLN005", "kill_restart with moves but no app freeze",
+                {"freeze": float(freeze)}))
+        return out
+    for mv in moves:
+        j = int(mv.bucket)
+        own = float(mv.nbytes) / bw_bytes_per_s \
+            if np.isfinite(bw_bytes_per_s) else 0.0
+        tol = eps + 1e-9 * max(own, 1.0)
+        if mode == "batched_fluid":
+            # within a round every link ships sequentially, so the pause
+            # is exactly the bucket's own transfer (Megaphone guarantee)
+            if abs(width[j] - own) > tol:
+                out.append(Finding(
+                    "PLN005", f"bucket {j} pause {width[j]:.6g}s != its "
+                              f"own transfer {own:.6g}s (batched_fluid "
+                              f"guarantee)",
+                    {"bucket": j, "pause": float(width[j]),
+                     "own_transfer": own, "mode": mode}))
+        elif mode == "fluid":
+            # pause = own phase's [start, end): at least the bucket's own
+            # transfer (nothing ships faster than the link)
+            if width[j] < own - tol:
+                out.append(Finding(
+                    "PLN005", f"bucket {j} pause {width[j]:.6g}s shorter "
+                              f"than its own transfer {own:.6g}s",
+                    {"bucket": j, "pause": float(width[j]),
+                     "own_transfer": own, "mode": mode}))
+        elif mode in ("live", "progressive") and un_from[j] > eps:
+            out.append(Finding(
+                "PLN005", f"bucket {j} window opens at {un_from[j]:.6g}s "
+                          f"but {mode} buckets stop when migration "
+                          f"begins (§5.2)",
+                {"bucket": j, "from": float(un_from[j]), "mode": mode}))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PLN006 (permutation)
+# ---------------------------------------------------------------------------
+
+def check_permutation(plan: MigrationPlan,
+                      perm: Optional[np.ndarray] = None) -> List[Finding]:
+    """``perm`` (default: ``plan_to_permutation(plan)``) is a permutation
+    of [0, m) laying each new node's buckets out contiguously."""
+    out: List[Finding] = []
+    m = plan.old.m
+    if perm is None:
+        perm = plan_to_permutation(plan)
+    perm = np.asarray(perm)
+    if len(perm) != m:
+        out.append(Finding(
+            "PLN006", f"permutation has {len(perm)} entries, expected {m}",
+            {"len": int(len(perm)), "m": m}))
+        return out
+    counts = np.bincount(perm[(perm >= 0) & (perm < m)], minlength=m)
+    dup = np.nonzero(counts > 1)[0]
+    missing = np.nonzero(counts == 0)[0]
+    oob = perm[(perm < 0) | (perm >= m)]
+    if len(dup) or len(missing) or len(oob):
+        out.append(Finding(
+            "PLN006", f"not a permutation of [0, {m}): "
+                      f"{len(dup)} duplicated, {len(missing)} missing, "
+                      f"{len(oob)} out of range",
+            {"duplicated": dup[:8].tolist(),
+             "missing": missing[:8].tolist(),
+             "out_of_range": np.asarray(oob)[:8].tolist()}))
+        return out
+    # contiguity: walking perm must visit each new interval as one run
+    pos = 0
+    n_total = max(plan.old.n_nodes, plan.new.n_nodes)
+    for i, (lo, hi) in enumerate(plan.new.padded(n_total).intervals):
+        run = perm[pos:pos + (hi - lo)]
+        if not np.array_equal(run, np.arange(lo, hi)):
+            out.append(Finding(
+                "PLN006", f"new node {i}'s buckets [{lo}, {hi}) are not "
+                          f"a contiguous run in the permutation",
+                {"node": i, "interval": (int(lo), int(hi))}))
+        pos += hi - lo
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The composed catalog
+# ---------------------------------------------------------------------------
+
+def verify_migration(plan: MigrationPlan, s: np.ndarray, sim=None,
+                     mode: str = "live", max_inflight: int = 4,
+                     fluid_batch: int = 1, *,
+                     w: Optional[np.ndarray] = None,
+                     tau: Optional[float] = None,
+                     n_target: Optional[int] = None,
+                     relax_tau_max: Optional[float] = None,
+                     expected_old=None) -> List[Finding]:
+    """Run the full PLN catalog on ``plan`` as strategy ``mode`` would
+    execute it: derive the moves, build the schedule and windows through
+    the same ``strategy_schedule``/``strategy_windows`` dispatch the
+    runtime uses, and check every rule.  Returns all findings ([] =
+    clean)."""
+    from repro.runtime.serving import SimConfig, strategy_windows
+    sim = sim if sim is not None else SimConfig()
+    s_arr = np.asarray(s, dtype=np.float64)
+    out = check_plan(plan, s_arr, w=w, tau=tau, n_target=n_target,
+                     relax_tau_max=relax_tau_max, expected_old=expected_old)
+    if any(f.rule == "PLN001" for f in out):
+        return out          # derived moves/windows would be garbage
+    moves = move_list(plan, s_arr)
+    out += check_moves(plan, s_arr, moves)
+    schedule = strategy_schedule(moves, s_arr, mode,
+                                 max_inflight=max_inflight,
+                                 fluid_batch=fluid_batch)
+    out += check_schedule(moves, schedule, mode)
+    un_from, un_until, duration, freeze = strategy_windows(
+        moves, s_arr, sim, mode, max_inflight, fluid_batch, plan.old.m)
+    out += check_windows(moves, un_from, un_until, duration, freeze, mode,
+                         sim.bw_bytes_per_s, plan.old.m)
+    out += check_permutation(plan)
+    return out

@@ -147,10 +147,12 @@ def run_serving(arch: str = "qwen2.5-3b", smoke: bool = True,
     m = buckets
     req_bucket = route(np.arange(B) + 1000, m)
     backend = JaxBackend()
-    ctl = ElasticController(m, nodes, tau=tau,
-                            planner=ElasticPlanner(policy="ssm"),
-                            executor=MigrationExecutor(backend=backend,
-                                                       mode="live"))
+    ctl = ElasticController(
+        m, nodes, tau=tau, planner=ElasticPlanner(policy="ssm"),
+        # verify=True also arms the pre-execution plan checker: a plan
+        # violating the PLN catalog aborts before touching the live cache
+        executor=MigrationExecutor(backend=backend, mode="live",
+                                   verify="strict" if verify else None))
 
     cache = init_cache(cfg, B, P + G + 1)
     t0 = time.perf_counter()

@@ -541,10 +541,18 @@ class ControlLoop:
     ElasticServingSim and VectorizedServingSim qualify, which is what the
     scalar-vs-vector differential test drives.  Node losses and capacity
     changes arrive from the scenario and are folded into the monitor's
-    signals rather than invoked out-of-band."""
+    signals rather than invoked out-of-band.
 
-    def __init__(self, sim, policy=None, monitor: Optional[Monitor] = None):
+    ``verify`` (None | "warn" | "strict") turns on the
+    ``analysis.plancheck`` rule catalog on every plan the loop's
+    simulator charges: "strict" raises ``PlanVerificationError`` before a
+    bad plan's windows reach the drain."""
+
+    def __init__(self, sim, policy=None, monitor: Optional[Monitor] = None,
+                 verify: Optional[str] = None):
         self.sim = sim
+        if verify is not None:
+            sim.verify = verify
         self.policy = policy if policy is not None else \
             MigrationPolicy.for_sim(sim)
         trig = getattr(getattr(self.policy, "cfg", None), "tau_trigger",

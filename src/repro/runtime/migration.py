@@ -125,6 +125,35 @@ def fluid_budget(bucket_bytes: np.ndarray, batch: int) -> float:
     return max(batch, 1) * mx
 
 
+def strategy_schedule(moves: Sequence[Move], bucket_bytes: np.ndarray,
+                      mode: str, max_inflight: int = 4,
+                      fluid_batch: int = 1) -> List[List[Move]]:
+    """The phase/round structure strategy ``mode`` executes — the single
+    dispatch shared by ``MigrationExecutor``, ``serving.strategy_windows``
+    and ``analysis.plancheck``, so the verifier always checks exactly the
+    schedule the runtime runs (no checker/executor drift).
+
+    suspend / kill_restart → one bulk transfer; progressive → phases with
+    ``max_inflight`` buckets' budget per node; fluid → ``fluid_budget``
+    phases; batched_fluid → Hopcroft–Karp matching rounds; live → default
+    balanced phases.
+    """
+    if not moves:
+        return []
+    bb = np.asarray(bucket_bytes, dtype=np.float64)
+    if mode in ("suspend", "kill_restart"):
+        return [list(moves)]
+    if mode == "batched_fluid":
+        return schedule_rounds(moves, batch=fluid_batch)
+    if mode == "progressive":
+        budget = max_inflight * (float(bb.max()) if len(bb) else 1.0)
+        return schedule_phases(moves, phase_budget=budget)
+    if mode == "fluid":
+        return schedule_phases(moves,
+                               phase_budget=fluid_budget(bb, fluid_batch))
+    return schedule_phases(moves)                 # live
+
+
 def bucket_windows(phases: Sequence[Sequence[Move]], bw_bytes_per_s: float,
                    m: int, fluid: bool = False, sync_s: float = 0.0
                    ) -> Tuple[np.ndarray, np.ndarray, float]:
@@ -354,7 +383,9 @@ class JaxBackend:
         import time as _time
 
         import jax
-        t0 = _time.perf_counter()
+        # JaxBackend's whole point is a *measured* clock (docstring above):
+        # the wall time is reported, never fed back into planning
+        t0 = _time.perf_counter()   # jaxlint: disable=JAX005
         if hasattr(state, "run_phase"):       # device-resident bucketed view
             nbytes = state.run_phase(phase)
         else:                                  # host bucket pytrees
@@ -368,7 +399,7 @@ class JaxBackend:
                 nbytes += mv.nbytes
             if moved:
                 jax.block_until_ready(moved)
-        dt = _time.perf_counter() - t0
+        dt = _time.perf_counter() - t0   # jaxlint: disable=JAX005
         for mv in phase:
             placement[mv.bucket] = mv.dst
         start = self.clock
@@ -411,37 +442,53 @@ class MigrationExecutor:
                     own transfer.
       kill_restart— alias of suspend (full stop; the serving simulators
                     additionally charge the restart overhead).
+
+    verify: None (default) skips checking; "warn" runs the
+      ``analysis.plancheck`` rule catalog on every plan+schedule before
+      executing and prints findings to stderr; "strict" raises
+      ``PlanVerificationError`` instead — nothing runs on a bad plan.
     """
 
     MODES = ("suspend", "kill_restart", "live", "progressive", "fluid",
              "batched_fluid")
+    VERIFY_LEVELS = (None, "warn", "strict")
 
     def __init__(self, backend=None, mode: str = "live",
-                 max_inflight: int = 4, fluid_batch: int = 1):
+                 max_inflight: int = 4, fluid_batch: int = 1,
+                 verify: Optional[str] = None):
         if mode not in self.MODES:
             raise ValueError(f"mode must be one of {self.MODES}, "
                              f"got {mode!r}")
+        if verify not in self.VERIFY_LEVELS:
+            raise ValueError(f"verify must be one of {self.VERIFY_LEVELS}, "
+                             f"got {verify!r}")
         self.backend = backend or SimBackend()
         self.mode = mode
         self.max_inflight = max_inflight
         self.fluid_batch = fluid_batch
+        self.verify = verify
+
+    def _verify(self, plan: MigrationPlan, bb: np.ndarray,
+                moves: Sequence[Move],
+                phases: Sequence[Sequence[Move]]) -> None:
+        # lazy import: analysis imports this module at load time
+        from repro.analysis import plancheck
+        findings = plancheck.check_plan(plan, bb)
+        findings += plancheck.check_moves(plan, bb, moves)
+        findings += plancheck.check_schedule(moves, phases, self.mode)
+        findings += plancheck.check_permutation(plan)
+        plancheck.handle(findings, self.verify,
+                         where=f"MigrationExecutor[{self.mode}]")
 
     def execute(self, plan: MigrationPlan, state: BucketedState,
                 placement: np.ndarray) -> MigrationReport:
         bb = state.bucket_bytes()
         moves = move_list(plan, bb)
-        if self.mode == "progressive":
-            budget = self.max_inflight * (bb.max() if len(bb) else 1.0)
-            phases = schedule_phases(moves, phase_budget=budget)
-        elif self.mode == "fluid":
-            phases = schedule_phases(
-                moves, phase_budget=fluid_budget(bb, self.fluid_batch))
-        elif self.mode == "batched_fluid":
-            phases = schedule_rounds(moves, batch=self.fluid_batch)
-        elif self.mode in ("suspend", "kill_restart"):
-            phases = [list(moves)] if moves else []   # one bulk transfer
-        else:
-            phases = schedule_phases(moves)
+        phases = strategy_schedule(moves, bb, self.mode,
+                                   max_inflight=self.max_inflight,
+                                   fluid_batch=self.fluid_batch)
+        if self.verify:
+            self._verify(plan, bb, moves, phases)
         t0 = getattr(self.backend, "clock", 0.0)
         for phase in phases:
             self.backend.run_phase(phase, state, placement)

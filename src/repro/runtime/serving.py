@@ -42,9 +42,8 @@ from repro.core import (
     Assignment, ElasticPlanner, MigrationPlan, satisfies_balance,
 )
 from .migration import (
-    MigrationExecutor, Move, bucket_windows, fluid_budget, move_list,
-    naive_duration, phase_duration, round_windows, schedule_phases,
-    schedule_rounds,
+    MigrationExecutor, Move, bucket_windows, move_list, naive_duration,
+    round_windows, strategy_schedule,
 )
 
 SERVING_MODES = ("kill_restart", "live", "progressive", "fluid",
@@ -152,20 +151,15 @@ def strategy_windows(moves: List[Move], s_t: np.ndarray, sim: SimConfig,
         freeze = naive_duration(moves, sim.bw_bytes_per_s) + \
             sim.restart_overhead_s
         return un_from, un_until, freeze, freeze
+    schedule = strategy_schedule(moves, s_t, mode,
+                                 max_inflight=max_inflight,
+                                 fluid_batch=fluid_batch)
     if mode == "batched_fluid":
-        rounds = schedule_rounds(moves, batch=fluid_batch)
         un_from, un_until, clock = round_windows(
-            rounds, sim.bw_bytes_per_s, m, sync_s=sim.phase_sync_s)
+            schedule, sim.bw_bytes_per_s, m, sync_s=sim.phase_sync_s)
         return un_from, un_until, clock, 0.0
-    budget = None
-    if mode == "progressive":
-        mx = s_t.max() if len(s_t) else 1.0
-        budget = max_inflight * mx
-    elif mode == "fluid":
-        budget = fluid_budget(s_t, fluid_batch)
-    phases = schedule_phases(moves, phase_budget=budget)
     un_from, un_until, clock = bucket_windows(
-        phases, sim.bw_bytes_per_s, m, fluid=mode == "fluid",
+        schedule, sim.bw_bytes_per_s, m, fluid=mode == "fluid",
         sync_s=sim.phase_sync_s)
     return un_from, un_until, clock, 0.0
 
@@ -175,7 +169,8 @@ def plan_interval_windows(planner: ElasticPlanner, assign: Assignment,
                           sim: SimConfig, mode: str, tau: float,
                           max_inflight: int, fluid_batch: int,
                           met: IntervalMetrics,
-                          replan: Optional[bool] = None):
+                          replan: Optional[bool] = None,
+                          verify: Optional[str] = None):
     """One interval's migration decision: trigger, plan, and per-bucket
     unavailability windows.  Shared by the scalar oracle (ElasticServingSim)
     and the vectorized engine (simulator.VectorizedServingSim) so the two
@@ -187,6 +182,12 @@ def plan_interval_windows(planner: ElasticPlanner, assign: Assignment,
     (a MigrationPolicy decided the gain beats the cost); ``False`` holds the
     current assignment even through a violation (the policy decided *not*
     to migrate — callers must then pass n_t == current node count).
+
+    ``verify`` (None | "warn" | "strict") runs the full
+    ``analysis.plancheck`` rule catalog — PLN001..PLN006, including the
+    τ-feasibility and window rules only this call site has the inputs
+    for — on every plan before its windows are charged; "strict" raises
+    ``PlanVerificationError``, "warn" prints to stderr.
 
     Returns (assign', unavailable_from[m], unavailable_until[m], freeze)."""
     m = assign.m
@@ -207,6 +208,25 @@ def plan_interval_windows(planner: ElasticPlanner, assign: Assignment,
             strategy_windows(moves, s_t, sim, mode, max_inflight,
                              fluid_batch, m)
         met.migration_duration_s = clock
+        if verify:
+            # lazy: analysis imports this module at load time
+            from repro.analysis import plancheck
+            findings = plancheck.check_plan(
+                plan, s_t, w=w_t, tau=tau, n_target=n_t,
+                relax_tau_max=getattr(planner, "relax_tau_max", None),
+                expected_old=assign)
+            findings += plancheck.check_moves(plan, s_t, moves)
+            findings += plancheck.check_schedule(
+                moves, strategy_schedule(moves, s_t, mode,
+                                         max_inflight=max_inflight,
+                                         fluid_batch=fluid_batch), mode)
+            findings += plancheck.check_windows(
+                moves, unavailable_from, unavailable_until, clock, freeze,
+                mode, sim.bw_bytes_per_s, m)
+            findings += plancheck.check_permutation(plan)
+            plancheck.handle(findings, verify,
+                             where=f"plan_interval_windows[t={met.t}, "
+                                   f"{mode}]")
         if moves and freeze == 0.0:
             win = np.minimum(unavailable_until, sim.interval_s) - \
                 np.minimum(unavailable_from, sim.interval_s)
@@ -238,7 +258,8 @@ class ElasticServingSim:
 
     def __init__(self, m: int, sim: SimConfig, planner: ElasticPlanner,
                  mode: str = "live", max_inflight: int = 4,
-                 tau: float = 0.4, fluid_batch: int = 1):
+                 tau: float = 0.4, fluid_batch: int = 1,
+                 verify: Optional[str] = None):
         if mode not in SERVING_MODES:
             raise ValueError(f"mode must be one of {SERVING_MODES}, "
                              f"got {mode!r}")
@@ -249,6 +270,7 @@ class ElasticServingSim:
         self.max_inflight = max_inflight
         self.tau = tau
         self.fluid_batch = fluid_batch
+        self.verify = verify          # None | "warn" | "strict" (plancheck)
         self.assign: Optional[Assignment] = None
         self.queues = np.zeros(m)                  # per-bucket backlog items
         self.t = 0
@@ -292,7 +314,7 @@ class ElasticServingSim:
                 tau if tau is not None else self.tau,
                 self.max_inflight,
                 fluid_batch if fluid_batch is not None else self.fluid_batch,
-                met, replan=replan)
+                met, replan=replan, verify=self.verify)
         self._drain(self.t, w_t, self.assign, self.queues,
                     unavailable_from, unavailable_until, freeze_until, met)
         self.t += 1

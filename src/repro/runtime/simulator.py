@@ -117,7 +117,8 @@ class VectorizedServingSim:
                  mode: str = "live", max_inflight: int = 4,
                  tau: float = 0.4, fluid_batch: int = 1,
                  backend: str = "numpy", record_latency: bool = False,
-                 failures: Optional[Dict[int, set]] = None):
+                 failures: Optional[Dict[int, set]] = None,
+                 verify: Optional[str] = None):
         if mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
         if backend not in ("numpy", "jax"):
@@ -129,6 +130,7 @@ class VectorizedServingSim:
         self.max_inflight = max_inflight
         self.tau = tau
         self.fluid_batch = fluid_batch
+        self.verify = verify          # None | "warn" | "strict" (plancheck)
         self.backend = backend
         self.record_latency = record_latency
         # node-loss schedule {interval t: {failed node ids}}; at the start of
@@ -161,7 +163,7 @@ class VectorizedServingSim:
             tau if tau is not None else self.tau,
             self.max_inflight,
             fluid_batch if fluid_batch is not None else self.fluid_batch,
-            met, replan=replan)
+            met, replan=replan, verify=self.verify)
 
     # -- stepped observe/act API (control.ControlLoop drives this) ----------
     def reset(self, n0: int) -> "VectorizedServingSim":

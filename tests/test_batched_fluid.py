@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.analysis import assert_clean, check_schedule
 from repro.core import Assignment, ElasticPlanner, ssm
 from repro.runtime import (
     BucketedState, ControlLoop, MigrationExecutor, Move, SCENARIOS,
@@ -37,41 +38,20 @@ def test_rounds_are_maximal_matchings_covering_moves(seed, n_moves,
     moves = _random_moves(rng, n_moves, n_nodes)
     rounds = schedule_rounds(moves, batch=batch)
 
-    # exact coverage: every move shipped once, none invented
-    shipped = [(mv.bucket, mv.src, mv.dst, mv.nbytes)
-               for rnd in rounds for mv in rnd]
-    expect = [(mv.bucket, mv.src, mv.dst, mv.nbytes) for mv in moves]
-    assert sorted(shipped) == sorted(expect)
+    # exact coverage (PLN001) + matching validity and maximality (PLN002):
+    # the shared analysis.plancheck oracle, so this test and the runtime's
+    # verify hook can never disagree about what "correct rounds" means
+    assert_clean(check_schedule(moves, rounds, "batched_fluid"))
 
-    # replay: track how many moves each link still has before each round
-    left = {}
-    for mv in moves:
-        left[(mv.src, mv.dst)] = left.get((mv.src, mv.dst), 0) + 1
+    # batch budget: a link ships at most `cap` bytes beyond its first
+    # (always-allowed) bucket — executor knob, not part of the PLN catalog
     cap = batch * max(mv.nbytes for mv in moves)
     for rnd in rounds:
-        assert rnd, "no empty rounds"
-        # validity: within a round each node sends on at most one link and
-        # receives on at most one link (the matching property)
-        src_to_dst, dst_to_src = {}, {}
-        for mv in rnd:
-            assert src_to_dst.setdefault(mv.src, mv.dst) == mv.dst
-            assert dst_to_src.setdefault(mv.dst, mv.src) == mv.src
-        # batch budget: a link ships at most `cap` bytes beyond its first
-        # (always-allowed) bucket
         per_link = {}
         for mv in rnd:
             per_link.setdefault((mv.src, mv.dst), []).append(mv.nbytes)
         for sizes in per_link.values():
             assert sum(sizes[1:]) <= cap + 1e-9
-        # maximality: every link with pending moves must have had one of
-        # its endpoints busy this round (else the matching wasn't maximum)
-        for (s_, d_), k in left.items():
-            if k > 0:
-                assert s_ in src_to_dst or d_ in dst_to_src, \
-                    f"link ({s_},{d_}) was schedulable but left idle"
-        for lk, sizes in per_link.items():
-            left[lk] -= len(sizes)
-            assert left[lk] >= 0
 
 
 @given(seed=st.integers(0, 300), n=st.integers(1, 10))

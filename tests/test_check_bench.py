@@ -1,0 +1,92 @@
+"""check_bench gate semantics: a BENCH file absent at the baseline ref is
+"new, pass with a notice" (no two-commit dance for benchmark-adding PRs),
+while a broken git invocation — bad --ref in particular — is a hard error,
+never a silent pass."""
+import importlib.util
+import json
+import os
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+spec = importlib.util.spec_from_file_location(
+    "check_bench", REPO / "scripts" / "check_bench.py")
+check_bench = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(check_bench)
+
+
+@pytest.fixture
+def new_bench_file():
+    path = REPO / "BENCH_unittest_tmp.json"
+    path.write_text(json.dumps({"metric": 1.0}))
+    try:
+        yield path.name
+    finally:
+        os.unlink(path)
+
+
+def test_new_file_passes_with_notice(new_bench_file, capsys):
+    rc = check_bench.main([new_bench_file])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "NEW" in out and "passing" in out
+
+
+def test_committed_returns_none_for_absent_path():
+    assert check_bench.committed("BENCH_never_existed.json", "HEAD") is None
+
+
+def test_committed_baseline_roundtrips():
+    text = check_bench.committed("BENCH_ssm.json", "HEAD")
+    assert text is not None
+    json.loads(text)                     # parseable baseline
+
+
+def test_bad_ref_is_a_hard_error(new_bench_file, capsys):
+    rc = check_bench.main(["--ref", "no-such-ref-xyz", new_bench_file])
+    out = capsys.readouterr().out
+    assert rc == 2                       # not 0: the gate must not
+    assert "does not name a commit" in out   # silently disable itself
+
+
+def test_committed_raises_on_bad_ref():
+    with pytest.raises(check_bench.GitError):
+        check_bench.committed("BENCH_ssm.json", "no-such-ref-xyz")
+
+
+def test_drift_still_fails(monkeypatch, capsys):
+    """Numeric drift on a committed baseline still exits 1."""
+    name = "BENCH_ssm.json"
+    real = check_bench.committed
+    base = json.loads(real(name, "HEAD"))
+
+    def bump(node):
+        """Perturb the first gated numeric leaf."""
+        if isinstance(node, dict):
+            for k, v in node.items():
+                if isinstance(v, (int, float)) and not isinstance(v, bool) \
+                        and not check_bench.is_timing_key(k):
+                    node[k] = v + 1.0
+                    return True
+                if bump(v):
+                    return True
+        elif isinstance(node, list):
+            for v in node:
+                if bump(v):
+                    return True
+        return False
+
+    assert bump(base)
+    fresh = REPO / "BENCH_unittest_drift.json"
+    fresh.write_text(json.dumps(base))
+    # serve the real baseline for the drifted copy's (uncommitted) name
+    monkeypatch.setattr(check_bench, "committed",
+                        lambda n, ref: real(name, ref))
+    try:
+        rc = check_bench.main([fresh.name])
+    finally:
+        os.unlink(fresh)
+    out = capsys.readouterr().out
+    assert rc == 1 and "FAIL" in out

@@ -1,0 +1,262 @@
+"""jaxlint fixtures: one positive and one negative snippet per rule, the
+suppression mechanism, and the acceptance gate that ``src/repro`` itself
+lints clean (the same check ``scripts/ci.sh fast`` runs)."""
+from pathlib import Path
+from textwrap import dedent
+
+from repro.analysis import JAX_RULES, lint_file, lint_paths
+
+SRC = Path(__file__).resolve().parents[1] / "src" / "repro"
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+def lint(text, path="runtime/migration.py"):
+    """Lint a snippet; default path activates every rule incl. the
+    JAX005 planner/scheduler module filter."""
+    return lint_file(path, text=dedent(text))
+
+
+def test_rule_catalog_is_complete():
+    assert sorted(JAX_RULES) == [f"JAX00{i}" for i in range(1, 7)]
+
+
+# ---------------------------------------------------------------------------
+# JAX001 — mixed uint64/Python-int arithmetic
+# ---------------------------------------------------------------------------
+
+def test_jax001_bare_big_literal_fires():
+    findings = lint("""
+        import numpy as np
+        def h(x):
+            return x * 0x9E3779B97F4A7C15
+    """)
+    assert rules_of(findings) == {"JAX001"}
+
+
+def test_jax001_uint64_mixed_with_bare_int_fires():
+    findings = lint("""
+        import numpy as np
+        def h(x):
+            return np.uint64(x) + 12345
+    """)
+    assert rules_of(findings) == {"JAX001"}
+
+
+def test_jax001_properly_wrapped_hash_is_clean():
+    # the actual post-PR-1 route() idiom: every literal inside uint64(...)
+    findings = lint("""
+        import numpy as np
+        def route(keys, m, seed=0):
+            k = np.asarray(keys, dtype=np.uint64)
+            s = np.uint64((seed * 0x9E3779B97F4A7C15 + 0xBF58476D1CE4E5B9)
+                          % (1 << 64))
+            x = (k + s) * np.uint64(0x94D049BB133111EB)
+            x ^= x >> np.uint64(29)
+            return (x % np.uint64(m)).astype(np.int64)
+    """)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# JAX002 — tracer concretization inside jit/scan
+# ---------------------------------------------------------------------------
+
+def test_jax002_item_in_jit_fires():
+    findings = lint("""
+        import jax
+        @jax.jit
+        def f(x):
+            return x.item()
+    """)
+    assert rules_of(findings) == {"JAX002"}
+
+
+def test_jax002_float_in_scan_body_fires():
+    findings = lint("""
+        from jax import lax
+        def body(carry, x):
+            return carry + float(x), x
+        def run(xs):
+            return lax.scan(body, 0.0, xs)
+    """)
+    assert rules_of(findings) == {"JAX002"}
+
+
+def test_jax002_item_outside_tracing_is_clean():
+    findings = lint("""
+        def summarize(arr):
+            return arr.max().item()
+    """)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# JAX003 — numpy inside traced closures
+# ---------------------------------------------------------------------------
+
+def test_jax003_np_call_in_jit_fires():
+    findings = lint("""
+        import numpy as np
+        import jax
+        @jax.jit
+        def f(x):
+            return np.dot(x, x)
+    """)
+    assert rules_of(findings) == {"JAX003"}
+
+
+def test_jax003_jnp_in_jit_is_clean():
+    findings = lint("""
+        import jax
+        import jax.numpy as jnp
+        @jax.jit
+        def f(x):
+            return jnp.dot(x, x)
+    """)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# JAX004 — unscoped x64 mutation
+# ---------------------------------------------------------------------------
+
+def test_jax004_config_update_fires():
+    findings = lint("""
+        from jax import config
+        config.update("jax_enable_x64", True)
+    """)
+    assert rules_of(findings) == {"JAX004"}
+
+
+def test_jax004_other_config_keys_are_clean():
+    findings = lint("""
+        from jax import config
+        config.update("jax_platform_name", "cpu")
+    """)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# JAX005 — nondeterminism in planner/scheduler modules
+# ---------------------------------------------------------------------------
+
+def test_jax005_wall_clock_in_scheduler_fires():
+    findings = lint("""
+        import time
+        def schedule(moves):
+            return time.time()
+    """, path="core/ssm.py")
+    assert rules_of(findings) == {"JAX005"}
+
+
+def test_jax005_alias_import_is_tracked():
+    findings = lint("""
+        import time as _time
+        def schedule(moves):
+            return _time.perf_counter()
+    """, path="runtime/migration.py")
+    assert rules_of(findings) == {"JAX005"}
+
+
+def test_jax005_unseeded_np_random_fires_seeded_is_clean():
+    bad = lint("""
+        import numpy as np
+        def plan():
+            return np.random.rand(4)
+    """, path="core/planner.py")
+    assert rules_of(bad) == {"JAX005"}
+    good = lint("""
+        import numpy as np
+        def plan():
+            rng = np.random.default_rng(0)
+            return rng.random(4)
+    """, path="core/planner.py")
+    assert good == []
+
+
+def test_jax005_only_applies_to_planner_modules():
+    findings = lint("""
+        import time
+        def bench():
+            return time.time()
+    """, path="models/zoo.py")
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# JAX006 — mutable defaults
+# ---------------------------------------------------------------------------
+
+def test_jax006_mutable_default_arg_fires():
+    findings = lint("""
+        def register(name, registry={}):
+            registry[name] = True
+            return registry
+    """)
+    assert rules_of(findings) == {"JAX006"}
+
+
+def test_jax006_dataclass_field_literal_fires():
+    findings = lint("""
+        from dataclasses import dataclass
+        @dataclass
+        class Report:
+            items: list = []
+    """)
+    assert rules_of(findings) == {"JAX006"}
+
+
+def test_jax006_default_factory_is_clean():
+    findings = lint("""
+        from dataclasses import dataclass, field
+        @dataclass
+        class Report:
+            items: list = field(default_factory=list)
+        def register(name, registry=None):
+            return registry or {}
+    """)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+
+def test_trailing_suppression_comment():
+    findings = lint("""
+        import time
+        def schedule(moves):
+            return time.time()   # jaxlint: disable=JAX005 — measured wall clock
+    """, path="core/ssm.py")
+    assert findings == []
+
+
+def test_preceding_line_suppression_comment():
+    findings = lint("""
+        import time
+        def schedule(moves):
+            # jaxlint: disable=JAX005 — measured wall clock
+            return time.time()
+    """, path="core/ssm.py")
+    assert findings == []
+
+
+def test_suppression_is_rule_specific():
+    findings = lint("""
+        import time
+        def schedule(moves):
+            return time.time()   # jaxlint: disable=JAX001
+    """, path="core/ssm.py")
+    assert rules_of(findings) == {"JAX005"}
+
+
+# ---------------------------------------------------------------------------
+# The acceptance gate: our own source tree is clean
+# ---------------------------------------------------------------------------
+
+def test_src_repro_lints_clean():
+    findings = lint_paths([SRC])
+    assert findings == [], "\n".join(str(f) for f in findings)

@@ -1,0 +1,303 @@
+"""The negative space of the plan verifier: every PLN rule must fire on a
+hand-corrupted plan — and fire *alone*, so rule IDs stay meaningful — and
+real planner output must verify clean under every strategy.
+
+Corruptions (one per rule, per the invariant catalog in
+``analysis/plancheck.py``):
+
+* PLN001 — a move dropped from / duplicated in the schedule, and a stale
+  ``plan.old``.
+* PLN002 — valid rounds that leave a schedulable link idle (non-maximal).
+* PLN003 — a doctored ``plan.cost`` (bytes no longer conserved).
+* PLN004 — a structurally-valid plan that overloads one node past
+  (1+τ)W/n.
+* PLN005 — a pause window pushed outside [0, duration] and a pause on a
+  bucket that does not move.
+* PLN006 — a permutation with the contiguity broken / an index doubled.
+"""
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    PLN_RULES, PlanVerificationError, assert_clean, check_moves,
+    check_permutation, check_plan, check_schedule, check_windows,
+    verify_migration,
+)
+from repro.core import (
+    Assignment, ElasticPlanner, MigrationPlan, migration_cost,
+    migration_gain,
+)
+from repro.runtime import SimConfig
+from repro.runtime.migration import (
+    move_list, plan_to_permutation, schedule_rounds, strategy_schedule,
+)
+from repro.runtime.serving import SERVING_MODES, strategy_windows
+
+
+def _even(m, n):
+    cuts = np.linspace(0, m, n + 1).round().astype(int)
+    return Assignment.from_boundaries(m, list(cuts))
+
+
+def _honest_plan(old, new, s):
+    """A MigrationPlan whose gain/cost books are true for (old, new, s)."""
+    return MigrationPlan(old=old, new=new,
+                         gain=migration_gain(old, new, s),
+                         cost=migration_cost(old, new, s))
+
+
+@pytest.fixture
+def setup():
+    rng = np.random.default_rng(42)
+    m = 48
+    w = rng.pareto(1.5, m) + 0.1
+    s = rng.pareto(1.5, m) * 1e6 + 1e5
+    planner = ElasticPlanner(policy="ssm")
+    old = _even(m, 4)
+    plan = planner.plan(old, 6, w, s, tau=0.4)
+    return m, w, s, planner, old, plan
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# The positive space first: real plans are clean under every strategy
+# ---------------------------------------------------------------------------
+
+def test_real_plans_verify_clean_all_strategies(setup):
+    m, w, s, planner, old, plan = setup
+    for mode in SERVING_MODES:
+        findings = verify_migration(
+            plan, s, mode=mode, fluid_batch=4, w=w, tau=0.4, n_target=6,
+            relax_tau_max=planner.relax_tau_max, expected_old=old)
+        assert findings == [], f"{mode}: {[str(f) for f in findings]}"
+
+
+def test_rule_catalog_is_complete():
+    assert sorted(PLN_RULES) == [f"PLN00{i}" for i in range(1, 7)]
+
+
+# ---------------------------------------------------------------------------
+# PLN001 — coverage & ownership
+# ---------------------------------------------------------------------------
+
+def test_dropped_move_fires_pln001(setup):
+    m, w, s, planner, old, plan = setup
+    moves = move_list(plan, s)
+    schedule = strategy_schedule(moves, s, "live")
+    schedule[0] = schedule[0][1:]           # drop one move from a phase
+    findings = check_schedule(moves, schedule, "live")
+    assert rules_of(findings) == {"PLN001"}
+    assert any("dropped" in f.message for f in findings)
+
+
+def test_duplicated_bucket_fires_pln001(setup):
+    m, w, s, planner, old, plan = setup
+    moves = move_list(plan, s)
+    findings = check_moves(plan, s, moves + [moves[0]])
+    assert rules_of(findings) == {"PLN001"}
+    assert any("duplicate" in f.message for f in findings)
+
+
+def test_stale_old_assignment_fires_pln001(setup):
+    m, w, s, planner, old, plan = setup
+    live = _even(m, 5)                      # not the assignment planned from
+    findings = check_plan(plan, s, expected_old=live)
+    assert rules_of(findings) == {"PLN001"}
+    assert any("stale" in f.message for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# PLN002 — maximal matching rounds
+# ---------------------------------------------------------------------------
+
+def test_non_maximal_round_fires_pln002():
+    from repro.runtime import Move
+    moves = [Move(bucket=0, src=0, dst=1, nbytes=100.0),
+             Move(bucket=1, src=2, dst=3, nbytes=100.0)]
+    # both links are endpoint-disjoint, so a correct matching ships both in
+    # ONE round; splitting them is valid coverage but not maximal
+    lazy = [[moves[0]], [moves[1]]]
+    findings = check_schedule(moves, lazy, "batched_fluid")
+    assert rules_of(findings) == {"PLN002"}
+    assert any("not maximal" in f.message for f in findings)
+    # and the real scheduler's output is clean
+    assert_clean(check_schedule(moves, schedule_rounds(moves, batch=1),
+                                "batched_fluid"))
+
+
+def test_conflicting_round_fires_pln002():
+    from repro.runtime import Move
+    moves = [Move(bucket=0, src=0, dst=1, nbytes=100.0),
+             Move(bucket=1, src=0, dst=2, nbytes=100.0)]
+    both_at_once = [[moves[0], moves[1]]]   # node 0 sends on two links
+    findings = check_schedule(moves, both_at_once, "batched_fluid")
+    assert rules_of(findings) == {"PLN002"}
+    assert any("sends to both" in f.message for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# PLN003 — byte conservation
+# ---------------------------------------------------------------------------
+
+def test_doctored_cost_fires_pln003(setup):
+    m, w, s, planner, old, plan = setup
+    lying = MigrationPlan(old=plan.old, new=plan.new, gain=plan.gain,
+                          cost=plan.cost * 0.5)
+    findings = check_plan(lying, s)
+    assert rules_of(findings) == {"PLN003"}
+
+
+def test_mispriced_move_fires_pln003(setup):
+    m, w, s, planner, old, plan = setup
+    moves = move_list(plan, s)
+    bad = list(moves)
+    mv = bad[0]
+    bad[0] = type(mv)(bucket=mv.bucket, src=mv.src, dst=mv.dst,
+                      nbytes=mv.nbytes * 3.0)
+    findings = check_moves(plan, s, bad)
+    assert rules_of(findings) == {"PLN003"}
+
+
+# ---------------------------------------------------------------------------
+# PLN004 — capacity feasibility (Definition 2.1)
+# ---------------------------------------------------------------------------
+
+def test_over_cap_node_fires_pln004():
+    m = 8
+    w = np.ones(m)
+    s = np.full(m, 100.0)
+    old = _even(m, 2)
+    # one node hoards 7 of 8 unit-load buckets: load 7 > (1+0.2)·8/2 = 4.8
+    new = Assignment.from_boundaries(m, [0, 7, 8])
+    plan = _honest_plan(old, new, s)        # books are true → no PLN003
+    findings = check_plan(plan, s, w=w, tau=0.2, n_target=2)
+    assert rules_of(findings) == {"PLN004"}
+    # the same plan is fine at a τ that allows the skew
+    assert check_plan(plan, s, w=w, tau=10.0, n_target=2) == []
+
+
+def test_relax_ceiling_suppresses_pln004():
+    """A planner allowed to relax τ (relax_tau_max) must not be flagged at
+    the requested τ — only past the relax ceiling."""
+    m = 8
+    w = np.ones(m)
+    s = np.full(m, 100.0)
+    plan = _honest_plan(_even(m, 2), Assignment.from_boundaries(m, [0, 7, 8]),
+                        s)
+    strict = check_plan(plan, s, w=w, tau=0.2, n_target=2)
+    assert rules_of(strict) == {"PLN004"}
+    relaxed = check_plan(plan, s, w=w, tau=0.2, n_target=2,
+                         relax_tau_max=8.0)
+    assert relaxed == []
+
+
+# ---------------------------------------------------------------------------
+# PLN005 — window containment & pauses
+# ---------------------------------------------------------------------------
+
+def test_window_outside_interval_fires_pln005(setup):
+    m, w, s, planner, old, plan = setup
+    sim = SimConfig()
+    moves = move_list(plan, s)
+    un_from, un_until, duration, freeze = strategy_windows(
+        moves, s, sim, "live", 4, 1, m)
+    bad_until = un_until.copy()
+    bad_until[moves[0].bucket] = duration + 5.0     # past the interval end
+    findings = check_windows(moves, un_from, bad_until, duration, freeze,
+                             "live", sim.bw_bytes_per_s, m)
+    assert rules_of(findings) == {"PLN005"}
+    assert any("outside the migration interval" in f.message
+               for f in findings)
+
+
+def test_pausing_a_nonmover_fires_pln005(setup):
+    m, w, s, planner, old, plan = setup
+    sim = SimConfig()
+    moves = move_list(plan, s)
+    un_from, un_until, duration, freeze = strategy_windows(
+        moves, s, sim, "live", 4, 1, m)
+    movers = {mv.bucket for mv in moves}
+    stayer = next(j for j in range(m) if j not in movers)
+    bad_until = un_until.copy()
+    bad_until[stayer] = duration * 0.5              # pause a to-stay bucket
+    findings = check_windows(moves, un_from, bad_until, duration, freeze,
+                             "live", sim.bw_bytes_per_s, m)
+    assert rules_of(findings) == {"PLN005"}
+    assert any("does not move" in f.message for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# PLN006 — permutation validity
+# ---------------------------------------------------------------------------
+
+def test_swapped_permutation_fires_pln006(setup):
+    m, w, s, planner, old, plan = setup
+    perm = plan_to_permutation(plan).copy()
+    perm[0], perm[-1] = perm[-1], perm[0]   # breaks per-node contiguity
+    findings = check_permutation(plan, perm)
+    assert rules_of(findings) == {"PLN006"}
+
+
+def test_doubled_index_fires_pln006(setup):
+    m, w, s, planner, old, plan = setup
+    perm = plan_to_permutation(plan).copy()
+    perm[1] = perm[0]                       # no longer a bijection
+    findings = check_permutation(plan, perm)
+    assert rules_of(findings) == {"PLN006"}
+    assert any("not a permutation" in f.message for f in findings)
+
+
+def test_real_permutation_is_clean(setup):
+    m, w, s, planner, old, plan = setup
+    assert check_permutation(plan) == []
+
+
+# ---------------------------------------------------------------------------
+# Reporting plumbing
+# ---------------------------------------------------------------------------
+
+def test_assert_clean_raises_with_rule_ids(setup):
+    m, w, s, planner, old, plan = setup
+    lying = MigrationPlan(old=plan.old, new=plan.new, gain=plan.gain,
+                          cost=plan.cost * 2.0)
+    with pytest.raises(PlanVerificationError, match="PLN003"):
+        assert_clean(check_plan(lying, s), where="unit-test")
+
+
+def test_executor_strict_verify_rejects_corrupt_plan():
+    """MigrationExecutor(verify='strict') refuses to execute a plan whose
+    books are wrong, and executes an honest one normally."""
+    from repro.runtime import BucketedState, MigrationExecutor, SimBackend
+    m = 16
+    state = BucketedState([{"x": np.zeros(64, np.float64)}
+                           for _ in range(m)])
+    s = state.bucket_bytes()
+    old = _even(m, 2)
+    new = _even(m, 4)
+    plan = _honest_plan(old, new, s)
+    placement = old.owner_of().copy()
+    ex = MigrationExecutor(backend=SimBackend(), mode="live",
+                           verify="strict")
+    rep = ex.execute(plan, state, placement)        # honest: runs fine
+    assert rep.bytes_moved == pytest.approx(plan.cost)
+    lying = MigrationPlan(old=old, new=new, gain=plan.gain,
+                          cost=plan.cost + 12345.0)
+    with pytest.raises(PlanVerificationError, match="PLN003"):
+        ex.execute(lying, state, old.owner_of().copy())
+
+
+def test_sim_strict_verify_runs_clean():
+    """ElasticServingSim(verify='strict') over a scale event: the in-loop
+    hook sees only clean plans on real planner output."""
+    from repro.runtime import ElasticServingSim
+    m = 32
+    rng = np.random.default_rng(0)
+    w = rng.pareto(1.5, (4, m)) + 0.1
+    s = rng.pareto(1.5, (4, m)) * 1e4 + 1e3
+    sv = ElasticServingSim(m, SimConfig(), ElasticPlanner(policy="ssm"),
+                           mode="fluid", verify="strict")
+    mets = sv.run(w, s, [2, 3, 3, 2])
+    assert len(mets) == 4
